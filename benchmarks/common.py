@@ -1,0 +1,59 @@
+"""Shared benchmark helpers: CSV emission + reduced-scale sim settings.
+
+Scale note: the paper runs 300-500 rounds on the full datasets; benchmarks
+default to reduced rounds/samples so the full suite finishes on CPU, with
+--full restoring paper scale.  Scheme ORDERING (the papers' claims) is what
+these reproduce; absolute losses differ (synthetic data, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import RoundPolicy
+from repro.fl import SimConfig, SimHistory, run_simulation
+
+FAST = "--full" not in sys.argv
+
+POLICIES = {
+    "proposed": RoundPolicy(ds="alg3", ra="mo", sa="matching"),
+    "aou_ds": RoundPolicy(ds="aou_topk", ra="mo", sa="matching"),
+    "random_ds": RoundPolicy(ds="random", ra="mo", sa="matching"),
+    "cluster_ds": RoundPolicy(ds="cluster", ra="mo", sa="matching"),
+    "fixed_ds": RoundPolicy(ds="fixed", ra="mo", sa="matching"),
+}
+
+
+def emit(table: str, header: list[str], rows: list[list]):
+    print(f"#table,{table}")
+    print(",".join(["name"] + header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    sys.stdout.flush()
+
+
+def sim(dataset: str, policy: RoundPolicy, *, rounds=None, n_samples=None,
+        seed=0, **kw) -> SimHistory:
+    if rounds is None:
+        rounds = (25 if dataset == "cifar10" else 60) if FAST else 300
+    if n_samples is None:
+        n_samples = {"mnist": 500, "cifar10": 300 if FAST else 5000,
+                     "sst2": 600 if FAST else 2000}[dataset]
+    if FAST and dataset == "cifar10":
+        # Table-I batch 512 is hours per sim on this 1-core container;
+        # --full restores the paper's setting.
+        kw.setdefault("batch", 64)
+        kw.setdefault("local_steps", 2)
+    return run_simulation(SimConfig(
+        dataset=dataset, rounds=rounds, n_samples=n_samples,
+        policy=policy, seed=seed, eval_every=max(rounds // 12, 1), **kw))
+
+
+def timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.time()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeat * 1e6  # us per call

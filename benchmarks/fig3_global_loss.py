@@ -1,0 +1,27 @@
+"""Fig. 3: global loss of the 5 device-selection schemes on the three
+datasets (N=20, K=4, P_t=10 dBm, R=500 m)."""
+from __future__ import annotations
+
+from .common import POLICIES, emit, sim
+
+
+def run(datasets=("mnist", "cifar10", "sst2"), seeds=(0,) if __import__("benchmarks.common", fromlist=["FAST"]).FAST else (0, 1)):
+    rows = []
+    for ds in datasets:
+        for name, pol in POLICIES.items():
+            losses, accs, lats = [], [], []
+            for s in seeds:
+                h = sim(ds, pol, seed=s)
+                losses.append(h.global_loss[-1])
+                accs.append(h.accuracy[-1])
+                lats.append(h.latency_s.mean())
+            rows.append([f"{ds}/{name}",
+                         round(sum(losses) / len(losses), 4),
+                         round(sum(accs) / len(accs), 4),
+                         round(sum(lats) / len(lats), 3)])
+    emit("fig3_global_loss", ["final_loss", "final_acc", "mean_latency_s"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Fig. 4: RA/SA ablation — proposed device selection with each combination
+of {MO-RA, FIX-RA} x {M-SA, R-SA}."""
+from __future__ import annotations
+
+from repro.core import RoundPolicy
+
+from .common import emit, sim
+
+COMBOS = {
+    "MO-RA+M-SA": RoundPolicy(ds="alg3", ra="mo", sa="matching"),
+    "MO-RA+R-SA": RoundPolicy(ds="alg3", ra="mo", sa="random"),
+    "FIX-RA+M-SA": RoundPolicy(ds="alg3", ra="fix", sa="matching"),
+    "FIX-RA+R-SA": RoundPolicy(ds="alg3", ra="fix", sa="random"),
+}
+
+
+def run(dataset="mnist", seeds=(0,) if __import__("benchmarks.common", fromlist=["FAST"]).FAST else (0, 1)):
+    rows = []
+    for name, pol in COMBOS.items():
+        losses, ntx = [], []
+        for s in seeds:
+            h = sim(dataset, pol, seed=s)
+            losses.append(h.global_loss[-1])
+            ntx.append(h.n_transmitted.mean())
+        rows.append([name, round(sum(losses) / len(losses), 4),
+                     round(sum(ntx) / len(ntx), 3)])
+    emit("fig4_ablation", ["final_loss", "mean_n_transmitted"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Fig. 5: impact of the number of devices N (fixed total data => more
+devices = less data per selected round => higher loss)."""
+from __future__ import annotations
+
+from .common import POLICIES, emit, sim
+
+
+def run(ns=(10, 20, 30), seeds=(0,)):
+    rows = []
+    for n in ns:
+        for name in ("proposed", "random_ds"):
+            losses = []
+            for s in seeds:
+                h = sim("mnist", POLICIES[name], seed=s, n_devices=n)
+                losses.append(h.global_loss[-1])
+            rows.append([f"N{n}/{name}", round(sum(losses) / len(losses), 4)])
+    emit("fig5_num_devices", ["final_loss"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

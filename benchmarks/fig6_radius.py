@@ -1,0 +1,25 @@
+"""Fig. 6: impact of the cell radius R — larger radius degrades channels,
+Prop. 1 locks out more devices, loss rises."""
+from __future__ import annotations
+
+from .common import POLICIES, emit, sim
+
+
+def run(radii=(200.0, 500.0, 1000.0), seeds=(0,)):
+    rows = []
+    for r in radii:
+        for name in ("proposed", "random_ds"):
+            losses, ntx = [], []
+            for s in seeds:
+                h = sim("mnist", POLICIES[name], seed=s, radius_m=r)
+                losses.append(h.global_loss[-1])
+                ntx.append(h.n_transmitted.mean())
+            rows.append([f"R{int(r)}/{name}",
+                         round(sum(losses) / len(losses), 4),
+                         round(sum(ntx) / len(ntx), 3)])
+    emit("fig6_radius", ["final_loss", "mean_n_transmitted"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Fig. 7: impact of the number of sub-channels K — #selected devices and
+per-round latency (proposed vs random DS)."""
+from __future__ import annotations
+
+from .common import POLICIES, emit, sim
+
+
+def run(ks=(2, 4, 6, 8), seeds=(0,)):
+    rows = []
+    for k in ks:
+        for name in ("proposed", "random_ds"):
+            ntx, lat = [], []
+            for s in seeds:
+                h = sim("mnist", POLICIES[name], seed=s, n_subchannels=k,
+                        rounds=30)
+                ntx.append(h.n_transmitted.mean())
+                lat.append(h.latency_s.mean())
+            rows.append([f"K{k}/{name}", round(sum(ntx) / len(ntx), 3),
+                         round(sum(lat) / len(lat), 3)])
+    emit("fig7_subchannels", ["mean_n_transmitted", "mean_latency_s"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

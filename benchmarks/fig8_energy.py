@@ -1,0 +1,28 @@
+"""Fig. 8: impact of the energy budget E^max on participation and latency,
+MO-RA vs FIX-RA (random DS as in the paper)."""
+from __future__ import annotations
+
+from repro.core import RoundPolicy
+
+from .common import emit, sim
+
+
+def run(budgets=(0.005, 0.01, 0.02, 0.05), seeds=(0,)):
+    rows = []
+    for e in budgets:
+        for ra in ("mo", "fix"):
+            pol = RoundPolicy(ds="random", ra=ra, sa="matching")
+            ntx, lat = [], []
+            for s in seeds:
+                h = sim("mnist", pol, seed=s, e_max_j=e, rounds=30)
+                ntx.append(h.n_transmitted.mean())
+                lats = h.latency_s[h.latency_s > 0]
+                lat.append(lats.mean() if lats.size else 0.0)
+            rows.append([f"E{e}/{ra}-ra", round(sum(ntx) / len(ntx), 3),
+                         round(sum(lat) / len(lat), 3)])
+    emit("fig8_energy", ["mean_n_transmitted", "mean_latency_s"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Deliverable (g): roofline table from the dry-run JSON dumps.
+
+Reads results/dryrun_single_pod.json (+ multi_pod if present) and prints,
+per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and a one-line "what would move the
+dominant term" note.  Also emits a markdown table to
+results/roofline_table.md for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results")
+
+ADVICE = {
+    "compute_s": "reduce redundant compute (remat policy, MoE capacity factor, "
+                 "MTP head) or add chips",
+    "memory_s": "cut HBM traffic: fuse weighting into matmuls, shrink KV cache "
+                "(MLA/SWA), bf16 states",
+    "collective_s": "reshard to cut all-reduce volume (reduce-scatter grads, "
+                    "fold FL weights into loss for ONE psum, overlap with compute)",
+}
+
+
+def _load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f).get("results", [])
+
+
+def run(write_md: bool = True):
+    rows = []
+    md = ["| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+          "| dominant | useful FLOPs ratio |",
+          "|---|---|---|---|---|---|---|---|"]
+    for fname in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
+        for r in _load(fname):
+            roof = r["roofline"]
+            c, m, k = roof["compute_s"], roof["memory_s"], roof["collective_s"]
+            dom = roof["dominant"]
+            rows.append([
+                f"{r['arch']}/{r['shape']}/{r['mesh']}",
+                round(c * 1e3, 3), round(m * 1e3, 3), round(k * 1e3, 3),
+                dom.replace("_s", ""), round(roof["useful_ratio"], 3),
+            ])
+            md.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {c*1e3:.2f} "
+                f"| {m*1e3:.2f} | {k*1e3:.2f} | {dom.replace('_s','')} "
+                f"| {roof['useful_ratio']:.2f} |")
+    emit("roofline", ["compute_ms", "memory_ms", "collective_ms", "dominant",
+                      "useful_ratio"], rows)
+    if write_md and rows:
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, "roofline_table.md"), "w") as f:
+            f.write("\n".join(md) + "\n")
+        print(f"# wrote {len(rows)} rows to results/roofline_table.md")
+    if not rows:
+        print("# no dry-run JSON found; run repro.launch.dryrun --all --json first")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

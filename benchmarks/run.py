@@ -1,0 +1,58 @@
+"""Benchmark entrypoint: one table per paper figure + Prop-3 + kernels +
+roofline. Prints name,...,derived CSV blocks (``#table,<name>`` headers).
+
+  PYTHONPATH=src python -m benchmarks.run            # reduced scale
+  PYTHONPATH=src python -m benchmarks.run --full     # paper scale
+  PYTHONPATH=src python -m benchmarks.run --only fig3_global_loss
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (
+    fig3_global_loss,
+    fig4_ablation,
+    fig5_num_devices,
+    fig6_radius,
+    fig7_subchannels,
+    fig8_energy,
+    fig9_power,
+    kernels_micro,
+    prop3_bound,
+    roofline,
+)
+
+ALL = {
+    "fig3_global_loss": fig3_global_loss.run,
+    "fig4_ablation": fig4_ablation.run,
+    "fig5_num_devices": fig5_num_devices.run,
+    "fig6_radius": fig6_radius.run,
+    "fig7_subchannels": fig7_subchannels.run,
+    "fig8_energy": fig8_energy.run,
+    "fig9_power": fig9_power.run,
+    "prop3_bound": prop3_bound.run,
+    "kernels_micro": kernels_micro.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    only = None
+    if "--only" in sys.argv:
+        only = sys.argv[sys.argv.index("--only") + 1]
+    t0 = time.time()
+    for name, fn in ALL.items():
+        if only and name != only:
+            continue
+        t = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"#table,{name}\nERROR,{type(e).__name__}: {e}")
+        print(f"# {name} took {time.time()-t:.1f}s\n")
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .ckpt import restore_checkpoint, save_checkpoint

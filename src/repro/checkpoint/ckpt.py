@@ -1,0 +1,69 @@
+"""Checkpointing: pytree <-> .npz with path-keyed arrays (no orbax offline).
+
+Works for params, optimizer states and decode caches; bf16 leaves round-trip
+via a uint16 view (npz has no bfloat16).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]
+
+_SEP = "|"
+_BF16_TAG = "__bf16__"
+
+
+def _key_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return _SEP.join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int | None = None) -> None:
+    flat = jax.tree_util.tree_leaves_with_path(tree)
+    arrays = {}
+    for p, leaf in flat:
+        key = _key_str(p)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[_BF16_TAG + key] = arr.view(np.uint16)
+        else:
+            arrays[key] = arr
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    np.savez(tmp, **arrays)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore_checkpoint(path: str, like: Any) -> tuple[Any, int | None]:
+    """Restore into the structure of `like` (shapes/dtypes must match)."""
+    with np.load(path) as data:
+        step = int(data["__step__"]) if "__step__" in data else None
+
+        def fill(p, leaf):
+            key = _key_str(p)
+            if _BF16_TAG + key in data:
+                arr = data[_BF16_TAG + key].view(jnp.bfloat16)
+            else:
+                arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch at {key}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            return jnp.asarray(arr)
+
+        return jax.tree_util.tree_map_with_path(fill, like), step

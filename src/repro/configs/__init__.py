@@ -1,0 +1,41 @@
+"""Config registry: the 10 assigned architectures (+ reduced smoke variants
+via ArchConfig.reduced()) and the paper's own simulation settings."""
+from .base import INPUT_SHAPES, ArchConfig, InputShape
+from .deepseek_v3_671b import CONFIG as deepseek_v3_671b
+from .granite_moe_3b_a800m import CONFIG as granite_moe_3b_a800m
+from .qwen1_5_110b import CONFIG as qwen1_5_110b
+from .whisper_base import CONFIG as whisper_base
+from .stablelm_3b import CONFIG as stablelm_3b
+from .yi_6b import CONFIG as yi_6b
+from .jamba_v0_1_52b import CONFIG as jamba_v0_1_52b
+from .rwkv6_7b import CONFIG as rwkv6_7b
+from .qwen2_7b import CONFIG as qwen2_7b
+from .qwen2_vl_2b import CONFIG as qwen2_vl_2b
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        deepseek_v3_671b,
+        granite_moe_3b_a800m,
+        qwen1_5_110b,
+        whisper_base,
+        stablelm_3b,
+        yi_6b,
+        jamba_v0_1_52b,
+        rwkv6_7b,
+        qwen2_7b,
+        qwen2_vl_2b,
+    )
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).reduced()
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise ValueError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "ARCHS", "get_config"]

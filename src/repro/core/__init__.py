@@ -1,0 +1,48 @@
+"""Paper core: Stackelberg-game convergence acceleration for wireless FL.
+
+Control-plane algorithms (all vectorized, run server-side between rounds):
+  wireless    -- system model, eqs. 1-10
+  feasibility -- Proposition 1
+  monotonic   -- Algorithm 1 (polyblock outer approximation, MO-RA)
+  matching    -- Algorithm 2 (swap matching, M-SA)
+  aou         -- Age-of-Update state, eqs. 6-7
+  selection   -- Algorithm 3 (+ benchmark schemes)
+  stackelberg -- per-round game orchestration
+  convergence -- Proposition 3 bound
+"""
+from .aou import AoUState, aou_weights, init_aou, step_aou
+from .convergence import convergence_bound, participation_deficit
+from .feasibility import feasible_mask, is_infeasible, min_comm_energy
+from .matching import (
+    U_MAX,
+    MatchResult,
+    is_two_sided_exchange_stable,
+    random_assignment,
+    swap_matching,
+)
+from .monotonic import RAResult, fixed_ra, grid_oracle, solve_pairs
+from .selection import (
+    SelectionOutcome,
+    priority_list,
+    select_aou_alg3,
+    select_cluster,
+    select_fixed,
+    select_random,
+    select_topk,
+)
+from .stackelberg import RoundPlan, RoundPolicy, make_clusters, plan_round
+from .wireless import (
+    Topology,
+    WirelessConfig,
+    comm_energy,
+    comm_rate,
+    comm_time,
+    compute_energy,
+    compute_time,
+    sample_channel_gains,
+    sample_topology,
+    total_energy,
+    total_time,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

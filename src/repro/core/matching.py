@@ -1,0 +1,133 @@
+"""Algorithm 2: matching-based sub-channel assignment (paper Sec. IV-B).
+
+One-to-one matching between the selected device set N_t and the K
+sub-channels.  Utilities come from the minimum-time matrix Gamma produced by
+Algorithm 1; infeasible (device, channel) combinations (Proposition 1) carry
+the sentinel utility U_max, giving players *incomplete preference lists*.
+Devices repeatedly propose pairwise swaps; a swap is executed iff it is a
+swap-blocking pair (Definition 2: neither involved device's utility rises and
+at least one strictly falls).  Termination at a two-sided exchange-stable
+matching (Definition 3) is guaranteed because the total utility strictly
+decreases with every executed swap and the matching space is finite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+__all__ = ["MatchResult", "swap_matching", "random_assignment", "U_MAX", "is_two_sided_exchange_stable"]
+
+U_MAX = 1e30  # sentinel utility for infeasible pairs (eq. 30)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchResult:
+    """assignment[i] = sub-channel of the i-th selected device."""
+
+    assignment: np.ndarray   # (n_sel,) int, channel index per device
+    utilities: np.ndarray    # (n_sel,) float, Gamma[assignment[i], i] or U_MAX
+    feasible: np.ndarray     # (n_sel,) bool: assigned to a *feasible* channel
+    n_swaps: int
+    n_rounds: int
+
+
+def _utilities(gamma_u: np.ndarray, assignment: np.ndarray) -> np.ndarray:
+    return gamma_u[assignment, np.arange(assignment.shape[0])]
+
+
+def prepare_utility(gamma: np.ndarray, feasible: np.ndarray) -> np.ndarray:
+    """Eq. (30): U = Gamma where feasible, U_max otherwise."""
+    gamma_u = np.where(feasible, gamma, U_MAX)
+    # Guard: any non-finite time is treated as infeasible too.
+    return np.where(np.isfinite(gamma_u), gamma_u, U_MAX)
+
+
+def swap_matching(
+    gamma: np.ndarray,
+    feasible: np.ndarray,
+    rng: np.random.Generator | None = None,
+    *,
+    initial: np.ndarray | None = None,
+    max_rounds: int = 200,
+) -> MatchResult:
+    """Run Algorithm 2.
+
+    Args:
+      gamma:    (K, n_sel) minimum-time matrix from Algorithm 1.
+      feasible: (K, n_sel) Proposition-1 mask.
+      rng:      used only for the random initial matching (paper line 2).
+      initial:  optional explicit initial assignment (for tests).
+    """
+    k, n_sel = gamma.shape
+    if n_sel > k:
+        raise ValueError(f"cannot match {n_sel} devices to {k} sub-channels")
+    gamma_u = prepare_utility(gamma, feasible)
+
+    if initial is not None:
+        assignment = np.asarray(initial, dtype=np.int64).copy()
+    else:
+        rng = np.random.default_rng(0) if rng is None else rng
+        assignment = rng.permutation(k)[:n_sel].astype(np.int64)
+
+    n_swaps = 0
+    for rnd in range(max_rounds):
+        swapped_this_round = False
+        for n in range(n_sel):           # active device (paper line 4)
+            for n2 in range(n_sel):      # proposal target (paper line 5)
+                if n2 == n:
+                    continue
+                ch_n, ch_n2 = assignment[n], assignment[n2]
+                u_n, u_n2 = gamma_u[ch_n, n], gamma_u[ch_n2, n2]
+                u_n_new, u_n2_new = gamma_u[ch_n2, n], gamma_u[ch_n, n2]
+                # Definition 2: swap-blocking pair.
+                if (
+                    u_n_new <= u_n
+                    and u_n2_new <= u_n2
+                    and (u_n_new < u_n or u_n2_new < u_n2)
+                ):
+                    assignment[n], assignment[n2] = ch_n2, ch_n
+                    n_swaps += 1
+                    swapped_this_round = True
+        if not swapped_this_round:       # full round without a blocking pair
+            break
+    utils = _utilities(gamma_u, assignment)
+    return MatchResult(
+        assignment=assignment,
+        utilities=utils,
+        feasible=utils < U_MAX,
+        n_swaps=n_swaps,
+        n_rounds=rnd + 1,
+    )
+
+
+def is_two_sided_exchange_stable(gamma_u: np.ndarray, assignment: np.ndarray) -> bool:
+    """Definition 3 checker (used by property tests): no swap-blocking pair."""
+    n_sel = assignment.shape[0]
+    for n in range(n_sel):
+        for n2 in range(n_sel):
+            if n2 == n:
+                continue
+            u_n = gamma_u[assignment[n], n]
+            u_n2 = gamma_u[assignment[n2], n2]
+            u_n_new = gamma_u[assignment[n2], n]
+            u_n2_new = gamma_u[assignment[n], n2]
+            if u_n_new <= u_n and u_n2_new <= u_n2 and (u_n_new < u_n or u_n2_new < u_n2):
+                return False
+    return True
+
+
+def random_assignment(
+    gamma: np.ndarray, feasible: np.ndarray, rng: np.random.Generator
+) -> MatchResult:
+    """R-SA baseline (Sec. VI): a uniformly random one-to-one assignment."""
+    k, n_sel = gamma.shape
+    gamma_u = prepare_utility(gamma, feasible)
+    assignment = rng.permutation(k)[:n_sel].astype(np.int64)
+    utils = _utilities(gamma_u, assignment)
+    return MatchResult(
+        assignment=assignment,
+        utilities=utils,
+        feasible=utils < U_MAX,
+        n_swaps=0,
+        n_rounds=0,
+    )

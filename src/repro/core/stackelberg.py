@@ -1,0 +1,161 @@
+"""Stackelberg-game round orchestration (paper Sec. III + Definition 1).
+
+Each communication round:
+  follower substrate : Algorithm 1 (MO-RA) evaluates the minimum-time matrix
+                       Gamma over all (sub-channel, device) pairs + the
+                       Proposition-1 feasibility mask;
+  leader             : Algorithm 3 selects devices by AoU x data-size
+                       priority, *predicting* the follower's matching;
+  follower           : Algorithm 2 (M-SA) fixes the final assignment;
+  bookkeeping        : per-round latency (eq. 9), energies, AoU update (eq. 6).
+
+The leader/follower pair returned by `plan_round` is a Stackelberg
+equilibrium in the sense of Definition 1: the leader's set maximizes the
+weighted participation objective (eq. 42) given the follower's best response,
+and the follower's (psi, tau, p) minimize latency given the leader's set.
+
+Benchmark schemes of Sec. VI are selected via `RoundPolicy`:
+  ds in {"alg3", "aou_topk", "random", "cluster", "fixed"}
+  ra in {"mo", "fix"}          (Algorithm 1 vs tau=p=0.5)
+  sa in {"matching", "random"} (Algorithm 2 vs uniform random)
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from .aou import AoUState, step_aou
+from .monotonic import RAResult, fixed_ra, solve_pairs
+from .selection import (
+    SelectionOutcome,
+    select_aou_alg3,
+    select_cluster,
+    select_fixed,
+    select_random,
+    select_topk,
+)
+from .wireless import WirelessConfig
+
+__all__ = ["RoundPolicy", "RoundPlan", "plan_round", "make_clusters"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPolicy:
+    ds: str = "alg3"        # device selection scheme
+    ra: str = "mo"          # resource allocation scheme
+    sa: str = "matching"    # sub-channel assignment scheme
+
+    def __post_init__(self):
+        if self.ds not in ("alg3", "aou_topk", "random", "cluster", "fixed"):
+            raise ValueError(f"unknown ds: {self.ds}")
+        if self.ra not in ("mo", "fix"):
+            raise ValueError(f"unknown ra: {self.ra}")
+        if self.sa not in ("matching", "random"):
+            raise ValueError(f"unknown sa: {self.sa}")
+
+    @property
+    def label(self) -> str:
+        ds = {"alg3": "Proposed(Alg3)", "aou_topk": "AoU-DS", "random": "Random-DS",
+              "cluster": "Cluster-DS", "fixed": "Fixed-DS"}[self.ds]
+        return f"{ds}+{'MO-RA' if self.ra == 'mo' else 'FIX-RA'}+" + (
+            "M-SA" if self.sa == "matching" else "R-SA")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """Everything the learning plane needs for one round."""
+
+    selected: np.ndarray       # (N,) bool S_n
+    transmitted: np.ndarray    # (N,) bool S_n * sum_k psi_kn (feasible uplink)
+    channel_of: np.ndarray     # (N,) int, sub-channel or -1
+    tau: np.ndarray            # (N,) tau_{k,n} on the assigned channel (nan if none)
+    p: np.ndarray              # (N,) power fraction (nan if none)
+    time_per_device: np.ndarray  # (N,) T_{k,n}, inf where not transmitting
+    energy_per_device: np.ndarray  # (N,) joules spent (0 where not transmitting)
+    latency_s: float           # eq. (9): max over transmitting devices (0 if none)
+    aou_next: AoUState         # AoU state after eq. (6) update
+    outcome: SelectionOutcome
+    gamma: np.ndarray          # (K, N) min-time matrix (Algorithm 1 output)
+    feasible: np.ndarray       # (K, N) Proposition-1 mask
+
+
+def make_clusters(n_devices: int, k: int, rng: np.random.Generator) -> np.ndarray:
+    """Random partition into ceil(N/K) clusters of size <= K (Sec. VI)."""
+    n_clusters = int(np.ceil(n_devices / k))
+    ids = rng.permutation(n_devices)
+    clusters = np.zeros(n_devices, dtype=np.int64)
+    for c in range(n_clusters):
+        clusters[ids[c * k : (c + 1) * k]] = c
+    return clusters
+
+
+def plan_round(
+    aou: AoUState,
+    beta: np.ndarray,
+    h2: np.ndarray,
+    cfg: WirelessConfig,
+    rng: np.random.Generator,
+    *,
+    policy: RoundPolicy = RoundPolicy(),
+    round_idx: int = 0,
+    clusters: np.ndarray | None = None,
+    fixed_ids: np.ndarray | None = None,
+    e_max: np.ndarray | float | None = None,
+) -> RoundPlan:
+    """Solve one Stackelberg round. h2 is the (K, N) channel realization."""
+    k, n = h2.shape
+    beta = np.asarray(beta, np.float64)
+
+    # ---- follower substrate: Algorithm 1 over ALL pairs (leader predicts
+    # the follower from the same Gamma; values are selection-independent). --
+    if policy.ra == "mo":
+        ra: RAResult = solve_pairs(beta[None, :], h2, cfg, e_max)
+    else:
+        ra = fixed_ra(beta[None, :], h2, cfg, e_max)
+    gamma, feas = ra.time_s, ra.feasible
+
+    # ---- leader: device selection (Algorithm 3 or a benchmark scheme). ----
+    alpha = aou.weights
+    if policy.ds == "alg3":
+        out = select_aou_alg3(alpha, beta, gamma, feas, rng, sa=policy.sa)
+    elif policy.ds == "aou_topk":
+        out = select_topk(alpha, beta, gamma, feas, rng, sa=policy.sa)
+    elif policy.ds == "random":
+        out = select_random(gamma, feas, rng, sa=policy.sa)
+    elif policy.ds == "cluster":
+        if clusters is None:
+            raise ValueError("cluster DS needs `clusters`")
+        out = select_cluster(gamma, feas, rng, round_idx, clusters, sa=policy.sa)
+    else:  # fixed
+        if fixed_ids is None:
+            raise ValueError("fixed DS needs `fixed_ids`")
+        out = select_fixed(gamma, feas, rng, fixed_ids, sa=policy.sa)
+
+    # ---- assemble per-device quantities on the assigned channels. --------
+    tau = np.full(n, np.nan)
+    p = np.full(n, np.nan)
+    t_dev = np.full(n, np.inf)
+    e_dev = np.zeros(n)
+    tx = out.transmitted
+    ids = np.where(tx)[0]
+    ch = out.channel_of[ids]
+    tau[ids] = ra.tau[ch, ids]
+    p[ids] = ra.p[ch, ids]
+    t_dev[ids] = ra.time_s[ch, ids]
+    e_dev[ids] = ra.energy_j[ch, ids]
+    latency = float(t_dev[ids].max()) if ids.size else 0.0
+
+    return RoundPlan(
+        selected=out.selected,
+        transmitted=tx,
+        channel_of=out.channel_of,
+        tau=tau,
+        p=p,
+        time_per_device=t_dev,
+        energy_per_device=e_dev,
+        latency_s=latency,
+        aou_next=step_aou(aou, tx),
+        outcome=out,
+        gamma=gamma,
+        feasible=feas,
+    )

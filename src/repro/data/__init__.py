@@ -1,0 +1,22 @@
+from .fl_datasets import (
+    Dataset,
+    FLPartition,
+    make_dataset,
+    mnist_like,
+    cifar_like,
+    sst2_like,
+    partition_imbalanced_iid,
+)
+from .pipeline import synthetic_token_batch, synthetic_lm_stream
+
+__all__ = [
+    "Dataset",
+    "FLPartition",
+    "make_dataset",
+    "mnist_like",
+    "cifar_like",
+    "sst2_like",
+    "partition_imbalanced_iid",
+    "synthetic_token_batch",
+    "synthetic_lm_stream",
+]

@@ -1,0 +1,18 @@
+"""Federated-learning substrate: clients, server aggregation (eq. 34), and
+the end-to-end FLOWN simulation harness."""
+from .client import make_local_trainer
+from .server import aggregate, masked_weighted_mean
+from .sim import SimConfig, SimHistory, TABLE1, run_simulation
+
+__all__ = [
+    "make_local_trainer",
+    "aggregate",
+    "masked_weighted_mean",
+    "SimConfig",
+    "SimHistory",
+    "TABLE1",
+    "run_simulation",
+]
+from .hierarchical import HierSimConfig, run_hierarchical  # noqa: E402
+
+__all__ += ["HierSimConfig", "run_hierarchical"]

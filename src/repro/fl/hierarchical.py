@@ -1,0 +1,122 @@
+"""Hierarchical (multi-cell) FLOWN — the FL semantics of the `pod` mesh axis.
+
+Beyond-paper extension: the paper studies a single server; on the 2-pod
+production mesh the natural topology is two cells, each with its own base
+station running the paper's FULL Stackelberg round (own channels, own
+sub-channels, own AoU state), followed by an inter-cell (cross-pod)
+aggregation of the cell models weighted by transmitted data:
+
+    cell c:   w_c = eq.(34) over its transmitting devices
+    global:   w   = sum_c W_c w_c / sum_c W_c ,  W_c = sum_{n in tx_c} beta_n
+
+This is exactly what the multi-pod train_step computes when the gradient
+all-reduce crosses the `pod` axis with fl_weights set per cohort — this
+module provides the simulation-plane counterpart so cell-level scheduling
+policies can be compared end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    RoundPolicy,
+    WirelessConfig,
+    init_aou,
+    plan_round,
+    sample_channel_gains,
+    sample_topology,
+)
+from ..data.fl_datasets import make_dataset, partition_imbalanced_iid
+from ..models.small import get_small_model
+from ..train.optimizer import make_optimizer
+from .client import make_local_trainer
+from .server import aggregate
+from .sim import TABLE1
+
+__all__ = ["HierSimConfig", "run_hierarchical"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HierSimConfig:
+    dataset: str = "mnist"
+    n_cells: int = 2
+    devices_per_cell: int = 10
+    subchannels_per_cell: int = 4
+    rounds: int = 40
+    policy: RoundPolicy = RoundPolicy()
+    seed: int = 0
+    n_samples: int = 400
+    local_steps: int = 3
+
+
+def run_hierarchical(cfg: HierSimConfig) -> dict:
+    """Two-tier FedAvg: per-cell Stackelberg rounds + inter-cell aggregation."""
+    rng = np.random.default_rng(cfg.seed)
+    t1 = TABLE1[cfg.dataset]
+    ds = make_dataset(cfg.dataset, rng, n=cfg.n_samples)
+    model = get_small_model(cfg.dataset)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k0 = jax.random.split(key)
+    params = model.init(k0)
+    opt = make_optimizer(t1["optimizer"], t1["lr"])
+    trainer = make_local_trainer(model.loss, opt, batch_size=t1["batch"],
+                                 local_steps=cfg.local_steps,
+                                 loss_per_example=model.loss_per_example)
+    eval_loss = jax.jit(model.loss)
+    x_full, y_full = jnp.asarray(ds.x), jnp.asarray(ds.y)
+
+    # Per-cell wireless worlds + data partitions.
+    from .sim import _pad_partition
+
+    cells = []
+    for c in range(cfg.n_cells):
+        wcfg = WirelessConfig(
+            n_devices=cfg.devices_per_cell,
+            n_subchannels=cfg.subchannels_per_cell,
+            model_bits=t1["model_bits"], e_max_j=t1["e_max"],
+        )
+        part = partition_imbalanced_iid(rng, ds.n, cfg.devices_per_cell)
+        x, y, m = _pad_partition(ds, part)
+        cells.append({
+            "wcfg": wcfg,
+            "topo": sample_topology(rng, wcfg),
+            "aou": init_aou(cfg.devices_per_cell),
+            "beta": part.beta.astype(np.float64),
+            "x": x, "y": y, "m": m,
+        })
+
+    losses, latencies = [], []
+    k_slots = cfg.subchannels_per_cell
+    for t in range(cfg.rounds):
+        cell_params, cell_weights, round_lat = [], [], 0.0
+        for cell in cells:
+            h2 = sample_channel_gains(rng, cell["wcfg"], cell["topo"])
+            plan = plan_round(cell["aou"], cell["beta"], h2, cell["wcfg"],
+                              rng, policy=cfg.policy, round_idx=t)
+            cell["aou"] = plan.aou_next
+            round_lat = max(round_lat, plan.latency_s)  # cells run in parallel
+            tx = np.where(plan.transmitted)[0]
+            slot_ids = np.zeros(k_slots, dtype=np.int64)
+            slot_w = np.zeros(k_slots, dtype=np.float32)
+            slot_ids[: len(tx)] = tx
+            slot_w[: len(tx)] = cell["beta"][tx]
+            if len(tx):
+                key_l, key = jax.random.split(key)[0], jax.random.split(key)[1]
+                keys = jax.random.split(key_l, k_slots)
+                client = trainer(params, cell["x"][slot_ids], cell["y"][slot_ids],
+                                 cell["m"][slot_ids], keys)
+                w_cell = aggregate(params, client, jnp.asarray(slot_w))
+                cell_params.append(w_cell)
+                cell_weights.append(float(slot_w.sum()))
+        if cell_params:
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *cell_params)
+            params = aggregate(params, stacked,
+                               jnp.asarray(cell_weights, jnp.float32))
+        losses.append(float(eval_loss(params, x_full, y_full)))
+        latencies.append(round_lat)
+    return {"loss": np.asarray(losses), "latency": np.asarray(latencies)}

@@ -1,0 +1,47 @@
+"""Server-side aggregation: the selection-masked weighted FedAvg of eq. (34).
+
+    w^{t+1} = sum_n S_n (sum_k psi_kn) beta_n w_n / sum_n S_n (sum_k psi_kn) beta_n
+
+Two implementations:
+  * `aggregate`       -- stacked-leaf weighted mean (single-host simulation);
+  * `masked_psum_agg` -- the distributed form used inside the big-model
+    train_step: each data shard contributes grad * weight, followed by ONE
+    psum over the data/pod axes (see repro.train.train_step).  The Pallas
+    kernel repro.kernels.fedavg_agg fuses the weighting+reduction for the
+    stacked single-host case.
+
+If no device transmits in a round (all-infeasible corner of Prop. 1), the
+global model is unchanged (weights sum to 0 -> guarded).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["aggregate", "masked_weighted_mean"]
+
+
+def masked_weighted_mean(stacked: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted mean over the leading axis; identity-safe at zero weight."""
+    wsum = weights.sum()
+    w = weights / jnp.maximum(wsum, 1e-30)
+    shape = (-1,) + (1,) * (stacked.ndim - 1)
+    return (stacked * w.reshape(shape)).sum(axis=0)
+
+
+@jax.jit
+def aggregate(global_params: Any, client_params: Any, weights: jax.Array) -> Any:
+    """Eq. (34).  client_params leaves have a leading slot axis (K, ...);
+    weights (K,) = S_n * sum_k psi_kn * beta_n per slot (0 for empty slots).
+
+    Falls back to the previous global model when sum(weights) == 0.
+    """
+    wsum = weights.sum()
+
+    def leaf(g, c):
+        agg = masked_weighted_mean(c, weights)
+        return jnp.where(wsum > 0, agg, g).astype(g.dtype)
+
+    return jax.tree_util.tree_map(leaf, global_params, client_params)

@@ -1,0 +1,210 @@
+"""End-to-end FLOWN simulation harness (reproduces paper Sec. VI).
+
+Couples the control plane (Stackelberg round planning over a simulated
+wireless network) with the learning plane (real JAX training of the paper's
+models on seeded synthetic datasets).  One `run_simulation` call produces
+the trajectory behind one curve of Figs. 3-9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    RoundPolicy,
+    WirelessConfig,
+    init_aou,
+    make_clusters,
+    participation_deficit,
+    plan_round,
+    sample_channel_gains,
+    sample_topology,
+)
+from ..data.fl_datasets import (
+    Dataset,
+    FLPartition,
+    make_dataset,
+    partition_dirichlet,
+    partition_imbalanced_iid,
+)
+from ..models.small import SmallModel, get_small_model
+from ..train.optimizer import make_optimizer
+from .client import make_local_trainer
+from .server import aggregate
+
+__all__ = ["SimConfig", "SimHistory", "run_simulation", "TABLE1"]
+
+# Table I per-dataset settings: (model_bits, e_max, lr, batch, optimizer).
+TABLE1 = {
+    "mnist": dict(model_bits=1e6, e_max=0.02, lr=0.01, batch=32, optimizer="sgd"),
+    "cifar10": dict(model_bits=5e6, e_max=0.1, lr=0.001, batch=512, optimizer="adam"),
+    "sst2": dict(model_bits=5e6, e_max=0.1, lr=0.01, batch=128, optimizer="sgd"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    dataset: str = "mnist"
+    n_devices: int = 20
+    n_subchannels: int = 4
+    rounds: int = 100
+    policy: RoundPolicy = RoundPolicy()
+    seed: int = 0
+    n_samples: int | None = None       # dataset size (None -> dataset default)
+    local_steps: int = 4
+    radius_m: float = 500.0
+    pt_dbm: float = 10.0
+    e_max_j: float | None = None       # None -> Table I per-dataset value
+    lr: float | None = None
+    batch: int | None = None
+    optimizer: str | None = None
+    eval_every: int = 1
+    track_gradnorm: bool = False       # needed for the Prop-3 bound benchmark
+    partition: str = "iid"             # "iid" (paper) | "dirichlet" (non-IID ext.)
+    dirichlet_alpha: float = 0.5
+
+    def wireless(self) -> WirelessConfig:
+        t1 = TABLE1[self.dataset]
+        return WirelessConfig(
+            n_devices=self.n_devices,
+            n_subchannels=self.n_subchannels,
+            radius_m=self.radius_m,
+            pt_dbm=self.pt_dbm,
+            model_bits=t1["model_bits"],
+            e_max_j=self.e_max_j if self.e_max_j is not None else t1["e_max"],
+        )
+
+
+@dataclasses.dataclass
+class SimHistory:
+    label: str
+    rounds: np.ndarray
+    global_loss: np.ndarray
+    accuracy: np.ndarray
+    latency_s: np.ndarray          # per-round latency (eq. 9)
+    cum_time_s: np.ndarray         # convergence time = sum of latencies
+    n_selected: np.ndarray
+    n_transmitted: np.ndarray
+    energy_j: np.ndarray           # total energy spent per round
+    deficits: np.ndarray           # Prop-3 participation deficits
+    grad_sq_norms: np.ndarray      # ||grad F||^2 per round (0 if untracked)
+    beta: np.ndarray
+    wall_s: float
+
+
+def _pad_partition(ds: Dataset, part: FLPartition):
+    """Pad per-device data to (N, Bmax, ...) + mask for vmapped training."""
+    bmax = int(part.beta.max())
+    n = part.n_devices
+    x = np.zeros((n, bmax) + ds.x.shape[1:], dtype=ds.x.dtype)
+    y = np.zeros((n, bmax), dtype=ds.y.dtype)
+    m = np.zeros((n, bmax), dtype=np.float32)
+    for i, idx in enumerate(part.indices):
+        x[i, : len(idx)] = ds.x[idx]
+        y[i, : len(idx)] = ds.y[idx]
+        m[i, : len(idx)] = 1.0
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(m)
+
+
+def run_simulation(cfg: SimConfig) -> SimHistory:
+    t_start = time.time()
+    rng = np.random.default_rng(cfg.seed)
+    wcfg = cfg.wireless()
+    t1 = TABLE1[cfg.dataset]
+
+    # ---- data + partition -------------------------------------------------
+    ds_kw = {} if cfg.n_samples is None else {"n": cfg.n_samples}
+    ds = make_dataset(cfg.dataset, rng, **ds_kw)
+    if cfg.partition == "dirichlet":
+        part = partition_dirichlet(rng, ds.y, cfg.n_devices, cfg.dirichlet_alpha)
+    else:
+        part = partition_imbalanced_iid(rng, ds.n, cfg.n_devices)
+    beta = part.beta.astype(np.float64)
+    x_all, y_all, m_all = _pad_partition(ds, part)
+    x_full, y_full = jnp.asarray(ds.x), jnp.asarray(ds.y)
+
+    # ---- model + trainer --------------------------------------------------
+    model: SmallModel = get_small_model(cfg.dataset)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k_init = jax.random.split(key)
+    params = model.init(k_init)
+    opt = make_optimizer(cfg.optimizer or t1["optimizer"], cfg.lr or t1["lr"])
+    trainer = make_local_trainer(
+        model.loss, opt, batch_size=cfg.batch or t1["batch"],
+        local_steps=cfg.local_steps, loss_per_example=model.loss_per_example,
+    )
+    eval_loss = jax.jit(model.loss)
+    eval_acc = jax.jit(model.accuracy)
+    grad_norm_sq = jax.jit(
+        lambda p: sum(
+            jnp.sum(jnp.square(g))
+            for g in jax.tree_util.tree_leaves(jax.grad(model.loss)(p, x_full, y_full))
+        )
+    )
+
+    # ---- wireless topology + scheme state ---------------------------------
+    topo = sample_topology(rng, wcfg)
+    aou = init_aou(cfg.n_devices)
+    clusters = make_clusters(cfg.n_devices, cfg.n_subchannels, rng)
+    fixed_ids = rng.permutation(cfg.n_devices)[: cfg.n_subchannels]
+
+    k_slots = cfg.n_subchannels
+    hist: dict[str, list] = {k: [] for k in (
+        "round", "loss", "acc", "lat", "nsel", "ntx", "energy", "deficit", "gnorm")}
+
+    for t in range(cfg.rounds):
+        h2 = sample_channel_gains(rng, wcfg, topo)
+        plan = plan_round(
+            aou, beta, h2, wcfg, rng,
+            policy=cfg.policy, round_idx=t, clusters=clusters, fixed_ids=fixed_ids,
+        )
+        aou = plan.aou_next
+
+        # ---- learning plane: train the transmitting devices. -------------
+        tx_ids = np.where(plan.transmitted)[0]
+        slot_ids = np.zeros(k_slots, dtype=np.int64)
+        slot_w = np.zeros(k_slots, dtype=np.float32)
+        slot_ids[: len(tx_ids)] = tx_ids
+        slot_w[: len(tx_ids)] = beta[tx_ids]
+
+        if len(tx_ids) > 0:
+            key, k_round = jax.random.split(key)
+            keys = jax.random.split(k_round, k_slots)
+            client_params = trainer(
+                params, x_all[slot_ids], y_all[slot_ids], m_all[slot_ids], keys
+            )
+            params = aggregate(params, client_params, jnp.asarray(slot_w))
+
+        # ---- bookkeeping ---------------------------------------------------
+        if (t % cfg.eval_every == 0) or (t == cfg.rounds - 1):
+            hist["round"].append(t)
+            hist["loss"].append(float(eval_loss(params, x_full, y_full)))
+            hist["acc"].append(float(eval_acc(params, x_full, y_full)))
+            hist["lat"].append(plan.latency_s)
+            hist["nsel"].append(int(plan.selected.sum()))
+            hist["ntx"].append(int(plan.transmitted.sum()))
+            hist["energy"].append(float(plan.energy_per_device.sum()))
+            hist["deficit"].append(participation_deficit(beta, plan.transmitted))
+            hist["gnorm"].append(float(grad_norm_sq(params)) if cfg.track_gradnorm else 0.0)
+
+    lat = np.asarray(hist["lat"])
+    return SimHistory(
+        label=cfg.policy.label,
+        rounds=np.asarray(hist["round"]),
+        global_loss=np.asarray(hist["loss"]),
+        accuracy=np.asarray(hist["acc"]),
+        latency_s=lat,
+        cum_time_s=np.cumsum(lat),
+        n_selected=np.asarray(hist["nsel"]),
+        n_transmitted=np.asarray(hist["ntx"]),
+        energy_j=np.asarray(hist["energy"]),
+        deficits=np.asarray(hist["deficit"]),
+        grad_sq_norms=np.asarray(hist["gnorm"]),
+        beta=beta,
+        wall_s=time.time() - t_start,
+    )

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots, each with a
+pure-jnp oracle (ref.py) and a jitted wrapper (ops.py):
+
+  flash_attention -- online-softmax attention, VMEM scratch accumulator
+  rwkv6_wkv       -- chunked WKV6 recurrence, state in VMEM scratch
+  fedavg_agg      -- fused selection-weighted FedAvg aggregation (eq. 34)
+
+On CPU the wrappers run interpret=True (kernel bodies execute in Python);
+on TPU they compile to Mosaic.
+"""

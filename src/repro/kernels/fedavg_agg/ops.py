@@ -1,0 +1,46 @@
+"""Jitted wrapper: aggregate an entire stacked parameter PYTREE in one
+kernel sweep (leaves are flattened, padded to the block size, concatenated,
+aggregated, and unflattened back)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fedavg_agg_call
+
+__all__ = ["fedavg_aggregate", "fedavg_aggregate_tree"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("bn", "interpret"))
+def fedavg_aggregate(stacked, weights, *, bn: int = 2048, interpret: bool | None = None):
+    """stacked (K, N), weights (K,) -> (N,)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    k, n = stacked.shape
+    pad = (-n) % bn
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    out = fedavg_agg_call(stacked, weights, bn=bn, interpret=interpret)
+    return out[:n]
+
+
+def fedavg_aggregate_tree(client_params, weights, *, bn: int = 2048,
+                          interpret: bool | None = None):
+    """client_params: pytree with leading slot axis K on every leaf.
+    Returns the aggregated pytree (eq. 34)."""
+    leaves, treedef = jax.tree_util.tree_flatten(client_params)
+    k = leaves[0].shape[0]
+    sizes = [int(x.size) // k for x in leaves]
+    flat = jnp.concatenate([x.reshape(k, -1).astype(jnp.float32) for x in leaves], axis=1)
+    agg = fedavg_aggregate(flat, weights, bn=bn, interpret=interpret)
+    out, off = [], 0
+    for x, sz in zip(leaves, sizes):
+        out.append(agg[off : off + sz].reshape(x.shape[1:]).astype(x.dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the selection-masked weighted FedAvg aggregation
+(paper eq. 34): w_new = sum_n weight_n * theta_n / sum_n weight_n, with
+weight_n = S_n * (sum_k psi_kn) * beta_n and zero-weight slots ignored."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["fedavg_agg_ref"]
+
+
+def fedavg_agg_ref(stacked, weights):
+    """stacked: (K, N) client tensors (flattened params); weights: (K,).
+    Returns (N,) = weighted mean over the leading axis (0 if all weights 0)."""
+    wsum = jnp.maximum(weights.sum(), 1e-30)
+    return jnp.einsum(
+        "k,kn->n", (weights / wsum).astype(jnp.float32), stacked.astype(jnp.float32)
+    ).astype(stacked.dtype)

@@ -1,0 +1,97 @@
+"""Flash attention for TPU: pl.pallas_call with explicit BlockSpec VMEM
+tiling and an online-softmax accumulator held in VMEM scratch across the
+sequential KV grid dimension.
+
+TPU adaptation (vs. the CUDA flash-attention): no warp-level primitives —
+the (bq, d) accumulator + (bq,) running max/denominator live in VMEM scratch
+that persists across grid steps of the innermost (KV) grid axis, which the
+TPU executes sequentially per core; block shapes default to MXU-aligned
+(128, 128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_call"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                           *, bq, bk, nk, scale, causal, window, q_offset):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+
+    rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_call(q, k, v, *, bq: int = 128, bk: int = 128,
+                         causal: bool = True, window: int = 0,
+                         scale: float | None = None, interpret: bool = False):
+    """q, k, v: (BH, S, D) flattened batch*heads. Returns (BH, Sq, D)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = d**-0.5 if scale is None else scale
+
+    kernel = functools.partial(
+        flash_attention_kernel,
+        bq=bq, bk=bk, nk=nk, scale=scale, causal=causal, window=window,
+        q_offset=sk - sq,  # right-aligned queries (prefill continuation)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+            pltpu.VMEM((bq,), jnp.float32),     # running max
+            pltpu.VMEM((bq,), jnp.float32),     # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Accepts model-layout tensors (B, S, H, D) with grouped KV heads (Hkv <= Hq),
+flattens to the kernel's (B*H, S, D) layout, and repeats KV heads per group.
+On CPU (no TPU backend) it runs the kernel body in interpret mode.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_call
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool | None = None):
+    """q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * hq, sk, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * hq, sk, d)
+    of = flash_attention_call(
+        qf, kf, vf, bq=bq, bk=bk, causal=causal, window=window, interpret=interpret
+    )
+    return of.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive causal softmax
+attention with optional sliding window. Shapes (B, H, S, D)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    scale = d**-0.5 if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal or window:
+        rows = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned queries
+        cols = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), bool)
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= cols > rows - window
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

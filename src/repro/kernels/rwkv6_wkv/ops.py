@@ -1,0 +1,34 @@
+"""Jitted wrapper: model layout (B, T, H, hs) -> kernel layout (B*H, T, hs).
+
+Drop-in replacement for repro.models.ssm.wkv6_scan_ref (pass as `wkv_impl`
+to rwkv6_time_mix on TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6_call
+
+__all__ = ["wkv6_pallas"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("bt", "interpret"))
+def wkv6_pallas(r, k, v, w, u, state, *, bt: int = 128, interpret: bool | None = None):
+    """Same signature/semantics as wkv6_scan_ref:
+    r,k,v,w (B,T,H,hs); u (H,hs); state (B,H,hs,hs) -> (y (B,T,H,hs), state)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, t, h, hs = r.shape
+    to_k = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, t, hs)
+    uf = jnp.broadcast_to(u[None], (b, h, hs)).reshape(b * h, hs)
+    s0 = state.reshape(b * h, hs, hs)
+    y, s_fin = wkv6_call(to_k(r), to_k(k), to_k(v), to_k(w), uf, s0,
+                         bt=bt, interpret=interpret)
+    y = y.reshape(b, h, t, hs).transpose(0, 2, 1, 3)
+    return y, s_fin.reshape(b, h, hs, hs)

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the WKV6 recurrence — re-exported from the model so
+the kernel is validated against exactly what the model executes."""
+from ...models.ssm import wkv6_scan_ref
+
+__all__ = ["wkv6_scan_ref"]

@@ -1,0 +1,292 @@
+"""Analytic FLOP / byte model for the roofline (documented formulas).
+
+XLA's static cost analysis counts scan bodies once (see hlo_analysis), so
+compiled numbers under-report deep models; the roofline's compute and memory
+terms are therefore derived analytically from the architecture config and
+input shape, with compiled numbers reported alongside as a cross-check.
+
+Conventions:
+  * 1 matmul MAC = 2 FLOPs; backward pass = 2x forward (dgrad + wgrad);
+  * attention scores/AV: causal halves the window on train/prefill;
+  * MoE: routed tokens = T x top_k x capacity_factor (+ shared experts);
+  * memory term counts per-step HBM traffic: params (+opt state for train,
+    x3 params for grads/updates), decode KV/state cache read+write, and
+    activation traffic approximated as ACT_IO x T x d x n_layers x 2 bytes
+    (remat-adjusted).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import ArchConfig, InputShape
+from ..models.moe import CAPACITY_FACTOR
+
+__all__ = ["HW", "analytic_cost", "model_flops", "param_counts"]
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+ACT_IO = 20          # activation tensors touched per token per layer (approx)
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+    chips: int = 256
+
+
+# --------------------------------------------------------------------------
+# Parameter counts per sublayer kind (matmul weights only, analytic).
+# --------------------------------------------------------------------------
+
+def _attn_params(cfg: ArchConfig) -> int:
+    dh = cfg.head_dim
+    return cfg.d_model * (cfg.n_heads * dh + 2 * cfg.n_kv_heads * dh) + cfg.n_heads * dh * cfg.d_model
+
+
+def _mla_params(cfg: ArchConfig) -> int:
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return (
+        cfg.d_model * cfg.q_lora_rank
+        + cfg.q_lora_rank * h * qk
+        + cfg.d_model * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+        + cfg.kv_lora_rank * h * (cfg.qk_nope_dim + cfg.v_head_dim)
+        + h * cfg.v_head_dim * cfg.d_model
+    )
+
+
+def _dense_ffn_params(cfg: ArchConfig) -> int:
+    return 3 * cfg.d_model * cfg.ffn_dense
+
+
+def _moe_params(cfg: ArchConfig) -> tuple[int, int]:
+    """(total expert bank, active per token incl. shared + router)."""
+    per_expert = 3 * cfg.d_model * cfg.ffn_expert
+    total = cfg.n_experts * per_expert + cfg.n_shared_experts * per_expert
+    active = (
+        cfg.top_k * CAPACITY_FACTOR * per_expert
+        + cfg.n_shared_experts * per_expert
+        + cfg.d_model * cfg.n_experts  # router
+    )
+    return total, int(active)
+
+
+def _rwkv_params(cfg: ArchConfig) -> int:
+    d = cfg.d_model
+    return 5 * d * d + d * 64 + 64 * d + d * cfg.d_ff + cfg.d_ff * d + d * d
+
+
+def _mamba_params(cfg: ArchConfig) -> int:
+    d, di, n = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr = max(d // 16, 1)
+    return d * 2 * di + cfg.mamba_d_conv * di + di * (dtr + 2 * n) + dtr * di + di * d
+
+
+def param_counts(cfg: ArchConfig) -> dict:
+    """Analytic totals: {'total': N, 'active': N_active} (matmul weights +
+    embeddings)."""
+    from ..models.transformer import stage_plan
+
+    total = active = 0
+    for st in stage_plan(cfg):
+        for kind in st.pattern:
+            if kind.mixer == "attn":
+                t = a = _attn_params(cfg)
+            elif kind.mixer == "mla":
+                t = a = _mla_params(cfg)
+            elif kind.mixer == "rwkv":
+                t = a = _rwkv_params(cfg)
+            else:
+                t = a = _mamba_params(cfg)
+            if kind.cross:
+                t += _attn_params(cfg); a += _attn_params(cfg)
+            if kind.ffn == "dense":
+                t += _dense_ffn_params(cfg); a += _dense_ffn_params(cfg)
+            elif kind.ffn == "moe":
+                mt, ma = _moe_params(cfg)
+                t += mt; a += ma
+            total += t * st.repeats
+            active += a * st.repeats
+    if cfg.is_encoder_decoder:
+        enc = (_attn_params(cfg) + _dense_ffn_params(cfg)) * cfg.n_encoder_layers
+        total += enc; active += enc
+    emb = 2 * cfg.vocab * cfg.d_model  # embed + lm_head
+    total += emb; active += emb
+    return {"total": total, "active": active}
+
+
+# --------------------------------------------------------------------------
+# FLOPs
+# --------------------------------------------------------------------------
+
+def _attn_score_flops(cfg: ArchConfig, b: int, sq: int, skv: float,
+                      *, decode: bool = False) -> float:
+    if cfg.use_mla:
+        if decode and not cfg.mla_absorb:
+            # Naive MLA decode re-up-projects the ENTIRE latent cache to
+            # per-head K/V every step — the dominant decode cost the
+            # mla_absorb variant removes (§Perf pair 3).
+            up = 2.0 * b * skv * cfg.kv_lora_rank * cfg.n_heads * (
+                cfg.qk_nope_dim + cfg.v_head_dim)
+            sc = 2.0 * b * cfg.n_heads * sq * skv * (
+                cfg.qk_nope_dim + cfg.qk_rope_dim + cfg.v_head_dim)
+            return up + sc
+        if decode and cfg.mla_absorb:
+            # Scores + AV run in the latent space (kv_r + rope dims).
+            return 2.0 * b * cfg.n_heads * sq * skv * 2 * (
+                cfg.kv_lora_rank + cfg.qk_rope_dim)
+        dh = cfg.qk_nope_dim + cfg.qk_rope_dim
+        dv = cfg.v_head_dim
+        return 2.0 * b * cfg.n_heads * sq * skv * (dh + dv)
+    dh = cfg.head_dim
+    return 2.0 * b * cfg.n_heads * sq * skv * (dh + dh)
+
+
+def _seq_mixer_state_flops(cfg: ArchConfig, b: int, s: int) -> float:
+    if cfg.family == "ssm":  # rwkv: per token per head ~4*hs^2 ops
+        return 4.0 * b * s * cfg.d_model * cfg.rwkv_head_size
+    return 0.0
+
+
+def _mamba_state_flops(cfg: ArchConfig, b: int, s: int) -> float:
+    return 6.0 * b * s * cfg.mamba_d_inner * cfg.mamba_d_state
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Forward FLOPs (global); 'train_total' = 3x forward. Also the 6ND
+    reference (N = active params)."""
+    from ..models.transformer import stage_plan
+
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        sq, tokens = 1, b
+        skv_full = float(min(s, cfg.sliding_window or s))
+    else:
+        sq, tokens = s, b * s
+        w = cfg.sliding_window or s
+        # causal average kv length
+        skv_full = (s / 2.0) if w >= s else (w - (w * w) / (2.0 * s))
+
+    flops = 0.0
+    for st in stage_plan(cfg):
+        for kind in st.pattern:
+            if kind.mixer == "attn":
+                flops += st.repeats * (2.0 * tokens * _attn_params(cfg)
+                                       + _attn_score_flops(cfg, b, sq, skv_full,
+                                                           decode=shape.kind == "decode"))
+            elif kind.mixer == "mla":
+                flops += st.repeats * (2.0 * tokens * _mla_params(cfg)
+                                       + _attn_score_flops(cfg, b, sq, skv_full,
+                                                           decode=shape.kind == "decode"))
+            elif kind.mixer == "rwkv":
+                flops += st.repeats * (2.0 * tokens * _rwkv_params(cfg)
+                                       + _seq_mixer_state_flops(cfg, b, sq))
+            else:
+                flops += st.repeats * (2.0 * tokens * _mamba_params(cfg)
+                                       + _mamba_state_flops(cfg, b, sq))
+            if kind.cross:
+                flops += st.repeats * (2.0 * tokens * _attn_params(cfg)
+                                       + 2.0 * b * cfg.n_heads * sq * cfg.encoder_seq
+                                       * 2 * cfg.head_dim)
+            if kind.ffn == "dense":
+                flops += st.repeats * 2.0 * tokens * _dense_ffn_params(cfg)
+            elif kind.ffn == "moe":
+                _, active = _moe_params(cfg)
+                flops += st.repeats * 2.0 * tokens * active
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        se = cfg.encoder_seq
+        enc_tok = b * se
+        per = 2.0 * enc_tok * (_attn_params(cfg) + _dense_ffn_params(cfg)) \
+            + 2.0 * b * cfg.n_heads * se * se * 2 * cfg.head_dim
+        flops += cfg.n_encoder_layers * per
+    flops += 2.0 * tokens * cfg.vocab * cfg.d_model  # lm head
+    if cfg.mtp and shape.kind == "train":
+        flops += 2.0 * tokens * cfg.vocab * cfg.d_model
+
+    pc = param_counts(cfg)
+    return {
+        "forward": flops,
+        "train_total": 3.0 * flops,
+        "six_nd_active": 6.0 * pc["active"] * tokens,
+        "six_nd_total": 6.0 * pc["total"] * tokens,
+        "tokens": tokens,
+    }
+
+
+# --------------------------------------------------------------------------
+# Bytes + roofline terms
+# --------------------------------------------------------------------------
+
+def _param_bytes(cfg: ArchConfig) -> float:
+    return 2.0 * param_counts(cfg)["total"]  # bf16
+
+
+def _opt_bytes(cfg: ArchConfig) -> float:
+    n = param_counts(cfg)["total"]
+    if cfg.optimizer in ("adam", "adamw"):
+        return 8.0 * n  # two f32 moments
+    if cfg.optimizer == "adafactor":
+        return 0.1 * n  # factored (rows+cols) -- small
+    return 4.0 * n
+
+
+def _cache_bytes(cfg: ArchConfig, shape: InputShape) -> float:
+    from ..models.transformer import cache_len_for, stage_plan
+
+    b = shape.global_batch
+    clen = cache_len_for(cfg, shape.seq_len)
+    total = 0.0
+    for st in stage_plan(cfg):
+        for kind in st.pattern:
+            if kind.mixer == "attn":
+                per = 2 * clen * cfg.n_kv_heads * cfg.head_dim * 2
+            elif kind.mixer == "mla":
+                per = clen * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+            elif kind.mixer == "rwkv":
+                per = cfg.n_rwkv_heads * cfg.rwkv_head_size**2 * 4 + 2 * cfg.d_model * 2
+            else:
+                per = cfg.mamba_d_inner * (cfg.mamba_d_state * 4 + (cfg.mamba_d_conv - 1) * 2)
+            total += st.repeats * per * b
+    return total
+
+
+def analytic_cost(cfg: ArchConfig, shape: InputShape, hw: HW = HW(),
+                  collective_bytes_per_dev: float = 0.0) -> dict:
+    """The three roofline terms (seconds) + supporting numbers."""
+    mf = model_flops(cfg, shape)
+    flops = mf["train_total"] if shape.kind == "train" else mf["forward"]
+
+    b, s = shape.global_batch, shape.seq_len
+    tokens = mf["tokens"]
+    pbytes = _param_bytes(cfg)
+    act = ACT_IO * tokens * cfg.d_model * cfg.n_layers * 2.0
+    if shape.kind == "train":
+        hbm = 3.0 * pbytes + 2.0 * _opt_bytes(cfg) + act * 2.0  # fwd+bwd traffic
+    elif shape.kind == "prefill":
+        hbm = pbytes + act
+    else:
+        hbm = pbytes + 2.0 * _cache_bytes(cfg, shape) + act
+
+    compute_s = flops / (hw.chips * hw.peak_flops)
+    memory_s = hbm / (hw.chips * hw.hbm_bw)
+    collective_s = collective_bytes_per_dev / hw.link_bw
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        **terms,
+        "dominant": dominant,
+        "flops_global": flops,
+        "hbm_bytes_global": hbm,
+        # 6ND counts fwd+bwd (train); inference forward is 2ND = 6ND / 3.
+        "model_flops_6nd": mf["six_nd_active"] * (1.0 if shape.kind == "train" else 1 / 3),
+        "useful_ratio": (mf["six_nd_active"] * (1.0 if shape.kind == "train" else 1 / 3))
+        / max(flops, 1.0),
+        "params_total": param_counts(cfg)["total"],
+        "params_active": param_counts(cfg)["active"],
+    }

@@ -1,0 +1,145 @@
+"""Post-SPMD HLO analysis for the roofline.
+
+Two facts make raw `compiled.cost_analysis()` insufficient on scanned models:
+  1. XLA's static cost analysis counts a while-loop BODY once, not
+     body x trip-count — scan-over-layers models under-report by ~n_layers.
+  2. cost_analysis has no collective statistics at all.
+
+This module parses `compiled.as_text()` (per-device program; shapes are
+per-shard) into computations, discovers `while` ops, extracts their trip
+counts from the loop-condition constants, and attributes collective-op bytes
+to computations scaled by the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["collective_stats", "parse_computations", "while_trip_counts"]
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Header params may nest parens (tuple types) — match greedily to the arrow.
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"%?[\w.\-]+\s*=\s*((?:\([^=]*?\)|[^=(]*?))\s*([\w\-]+)\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)", re.DOTALL
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_computations(text: str) -> dict[str, str]:
+    """Split an HLO module dump into {computation_name: body_text}."""
+    comps: dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in text.splitlines():
+        if cur_name is None:
+            m = _COMP_HDR.match(line.strip()) if "{" in line and "->" in line else None
+            if m:
+                cur_name = m.group(1)
+                cur_lines = []
+        else:
+            if line.strip() == "}":
+                comps[cur_name] = "\n".join(cur_lines)
+                cur_name = None
+            else:
+                cur_lines.append(line)
+    return comps
+
+
+def while_trip_counts(comps: dict[str, str]) -> dict[str, int]:
+    """body-computation name -> trip count (max constant in its condition)."""
+    trips: dict[str, int] = {}
+    for body_text in comps.values():
+        for m in _WHILE_RE.finditer(body_text):
+            cond, body = m.group(1), m.group(2)
+            consts = [int(c) for c in _CONST_RE.findall(comps.get(cond, ""))]
+            trips[body] = max(consts) if consts else 1
+    return trips
+
+
+def _multipliers(comps: dict[str, str], trips: dict[str, int]) -> dict[str, int]:
+    """Total execution multiplier per computation (product over enclosing
+    while loops, handling scan-in-scan nesting)."""
+    # parent body -> child bodies found inside it
+    children: dict[str, list[str]] = {}
+    for name, text in comps.items():
+        children[name] = [m.group(2) for m in _WHILE_RE.finditer(text)]
+
+    mult: dict[str, int] = {}
+
+    def visit(name: str, factor: int):
+        if name in mult and mult[name] >= factor:
+            return
+        mult[name] = max(mult.get(name, 0), factor)
+        for child in children.get(name, []):
+            visit(child, factor * trips.get(child, 1))
+
+    # Roots: computations never used as a while body.
+    bodies = set(trips)
+    for name in comps:
+        if name not in bodies:
+            visit(name, 1)
+    # Any body never reached from a root (defensive): multiplier = trip count.
+    for b in bodies:
+        if b not in mult:
+            visit(b, trips.get(b, 1))
+    return mult
+
+
+def collective_stats(text: str, *, detail: bool = False) -> dict:
+    """Per-device collective bytes, corrected for while-loop trip counts.
+
+    Returns {'all-reduce': bytes, ..., 'total': ..., 'count': n,
+             'raw_total': uncorrected}; with detail=True adds 'top': the 15
+    largest individual collectives as (op, bytes, xtrips, computation).
+    """
+    comps = parse_computations(text)
+    trips = while_trip_counts(comps)
+    mult = _multipliers(comps, trips)
+
+    out = {k: 0 for k in COLLECTIVES}
+    raw = 0
+    count = 0
+    items = []
+    for name, body in comps.items():
+        factor = mult.get(name, 1)
+        for line in body.splitlines():
+            m = _OP_RE.match(line.strip())
+            if not m:
+                continue
+            op = m.group(2)
+            base = op.replace("-start", "")
+            if base in COLLECTIVES and not op.endswith("-done"):
+                b = _shape_bytes(m.group(1))
+                out[base] += b * factor
+                raw += b
+                count += 1
+                if detail:
+                    items.append((base, b * factor, factor, name))
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["raw_total"] = raw
+    out["count"] = count
+    if detail:
+        out["top"] = sorted(items, key=lambda t: -t[1])[:15]
+    return out

@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, zero allocation).
+
+Per the assignment, modality frontends are stubs: audio provides precomputed
+conv-frontend frame embeddings, vlm provides patch embeddings + 3-D M-RoPE
+position ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, InputShape
+
+__all__ = ["input_specs", "decode_input_specs", "cache_specs"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _family_extras(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    ex = {}
+    if cfg.family == "audio":
+        ex["enc_frames"] = SDS((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        ex["image_embeds"] = SDS((batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        ex["mrope_pos"] = SDS((batch, seq, 3), jnp.int32)
+    return ex
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Inputs for train_step / prefill_step: the full-sequence batch.
+
+    fl_weights carries the paper's per-cohort selection weights
+    (alpha_n * beta_n * S_n * psi_n) — see DESIGN.md §2.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": SDS((b, s), jnp.int32),
+        **_family_extras(cfg, b, s),
+    }
+    if shape.kind == "train":
+        specs["labels"] = SDS((b, s), jnp.int32)
+        specs["fl_weights"] = SDS((b,), jnp.float32)
+    return specs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Inputs for serve_step: ONE new token against a seq_len-deep cache."""
+    b = shape.global_batch
+    specs = {
+        "token": SDS((b, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["mrope_pos"] = SDS((b, 1, 3), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape):
+    """Decode-cache ShapeDtypeStructs via eval_shape (no allocation)."""
+    from ..models.transformer import init_cache
+
+    b, s = shape.global_batch, shape.seq_len
+
+    def build():
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = jnp.zeros((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return init_cache(cfg, b, s, enc_out=enc_out)
+
+    return jax.eval_shape(build)

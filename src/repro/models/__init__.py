@@ -1,0 +1,11 @@
+from .small import SmallModel, get_small_model, mnist_mlp, cifar_cnn, sst2_text
+from .moe import ShardCtx
+from .transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    param_count,
+    stage_plan,
+)

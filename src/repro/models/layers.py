@@ -1,0 +1,143 @@
+"""Shared model-zoo building blocks (pure JAX, dict pytrees).
+
+Parameter convention: every weight matrix is stored (fan_in, fan_out) so the
+sharding rules in repro.sharding.partition can match on path names; compute
+runs in bf16 with f32 norms/softmax accumulations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "swiglu_init",
+    "swiglu",
+    "mlp_init",
+    "mlp",
+    "rope_freqs",
+    "apply_rope",
+    "apply_mrope",
+]
+
+DTYPE = jnp.bfloat16
+
+
+def dense_init(key, n_in: int, n_out: int, *, bias: bool = False, scale: float | None = None):
+    scale = (2.0 / (n_in + n_out)) ** 0.5 if scale is None else scale
+    p = {"w": (jax.random.normal(key, (n_in, n_out)) * scale).astype(DTYPE)}
+    if bias:
+        p["b"] = jnp.zeros((n_out,), DTYPE)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["g"]).astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    return ((xf - mean) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Feed-forward blocks
+# --------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, ff),
+        "up": dense_init(k2, d, ff),
+        "down": dense_init(k3, ff, d),
+    }
+
+
+def swiglu(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def mlp_init(key, d: int, ff: int, *, bias: bool = False):
+    k1, k2 = jax.random.split(key)
+    return {"fc": dense_init(k1, d, ff, bias=bias), "proj": dense_init(k2, ff, d, bias=bias)}
+
+
+def mlp(p, x, act=jax.nn.gelu):
+    return dense(p["proj"], act(dense(p["fc"], x)))
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings (RoPE + qwen2-vl M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (dim // 2,), f32."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _rot(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh), positions: broadcastable to (..., S), int32."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                                     # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv            # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                                # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    return _rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions_3d: jax.Array, theta: float, sections=(16, 24, 24)
+) -> jax.Array:
+    """qwen2-VL multimodal RoPE.
+
+    The head dim's frequency slots are split into (temporal, height, width)
+    sections; each section rotates by its own position stream.
+
+    x: (B, S, H, Dh); positions_3d: (B, S, 3) int32.  `sections` are in
+    *frequency pairs* and must sum to Dh // 2.
+    """
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    inv = rope_freqs(dh, theta)                                     # (Dh/2,)
+    # Section id per frequency slot: 0 = t, 1 = h, 2 = w.
+    sec = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )                                                                # (Dh/2,)
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),                            # (B, S, 3)
+        jnp.broadcast_to(sec[None, None, :], positions_3d.shape[:2] + sec.shape),
+        axis=-1,
+    )                                                                # (B, S, Dh/2)
+    ang = pos * inv                                                  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    return _rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,0 +1,166 @@
+"""The paper's three simulation models (Sec. VI footnote 6), pure JAX.
+
+  MNIST : MLP 784 -> 128 ReLU -> 256 ReLU -> 10 softmax
+  CIFAR : CNN 3x3x32 conv + 2x2 maxpool + 3x3x64 conv + 2x2 maxpool
+          -> 128 ReLU -> 10 softmax
+  SST-2 : embed(4000 -> 64) mean-pool -> 128 ReLU -> 1 sigmoid
+
+Each model is (init_fn, apply_fn, loss_fn); params are plain dict pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SmallModel", "mnist_mlp", "cifar_cnn", "sst2_text", "get_small_model", "param_count", "param_bits"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SmallModel:
+    name: str
+    init: Callable[[jax.Array], Any]
+    apply: Callable[[Any, jax.Array], jax.Array]       # logits
+    loss: Callable[[Any, jax.Array, jax.Array], jax.Array]  # mean loss
+    accuracy: Callable[[Any, jax.Array, jax.Array], jax.Array]
+    loss_per_example: Callable[[Any, jax.Array, jax.Array], jax.Array] = None  # (B,)
+
+
+def _dense_init(key, n_in, n_out):
+    k1, _ = jax.random.split(key)
+    w = jax.random.normal(k1, (n_in, n_out)) * jnp.sqrt(2.0 / n_in)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+def _xent_per_example(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+
+
+def _xent(logits, y):
+    return _xent_per_example(logits, y).mean()
+
+
+def _acc_multi(logits, y):
+    return (jnp.argmax(logits, axis=-1) == y).mean()
+
+
+def mnist_mlp() -> SmallModel:
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "fc1": _dense_init(k1, 784, 128),
+            "fc2": _dense_init(k2, 128, 256),
+            "out": _dense_init(k3, 256, 10),
+        }
+
+    def apply(params, x):
+        h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+        return h @ params["out"]["w"] + params["out"]["b"]
+
+    def loss(params, x, y):
+        return _xent(apply(params, x), y)
+
+    def loss_pe(params, x, y):
+        return _xent_per_example(apply(params, x), y)
+
+    def accuracy(params, x, y):
+        return _acc_multi(apply(params, x), y)
+
+    return SmallModel("mnist_mlp", init, apply, loss, accuracy, loss_pe)
+
+
+def cifar_cnn() -> SmallModel:
+    def conv_init(key, kh, kw, cin, cout):
+        w = jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / (kh * kw * cin))
+        return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
+
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "conv1": conv_init(k1, 3, 3, 3, 32),
+            "conv2": conv_init(k2, 3, 3, 32, 64),
+            "fc": _dense_init(k3, 8 * 8 * 64, 128),
+            "out": _dense_init(k4, 128, 10),
+        }
+
+    def _conv(x, p):
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return y + p["b"]
+
+    def _maxpool(x):
+        # 2x2 max pool via reshape (identical to reduce_window, but its
+        # gradient avoids XLA-CPU's scalar select-and-scatter path).
+        b, h, w, c = x.shape
+        return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+    def apply(params, x):
+        h = _maxpool(jax.nn.relu(_conv(x, params["conv1"])))
+        h = _maxpool(jax.nn.relu(_conv(h, params["conv2"])))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ params["fc"]["w"] + params["fc"]["b"])
+        return h @ params["out"]["w"] + params["out"]["b"]
+
+    def loss(params, x, y):
+        return _xent(apply(params, x), y)
+
+    def loss_pe(params, x, y):
+        return _xent_per_example(apply(params, x), y)
+
+    def accuracy(params, x, y):
+        return _acc_multi(apply(params, x), y)
+
+    return SmallModel("cifar_cnn", init, apply, loss, accuracy, loss_pe)
+
+
+def sst2_text(vocab: int = 4000, d_embed: int = 64) -> SmallModel:
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "embed": jax.random.normal(k1, (vocab, d_embed)).astype(jnp.float32) * 0.1,
+            "fc": _dense_init(k2, d_embed, 128),
+            "out": _dense_init(k3, 128, 1),
+        }
+
+    def apply(params, x):
+        emb = params["embed"][x].mean(axis=1)  # (B, d_embed) mean-pool
+        h = jax.nn.relu(emb @ params["fc"]["w"] + params["fc"]["b"])
+        return (h @ params["out"]["w"] + params["out"]["b"])[:, 0]  # (B,)
+
+    def _bce_pe(params, x, y):
+        logits = apply(params, x)
+        yf = y.astype(jnp.float32)
+        # Stable binary cross-entropy with logits, per example.
+        return (jnp.maximum(logits, 0) - logits * yf
+                + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+    def loss(params, x, y):
+        return _bce_pe(params, x, y).mean()
+
+    def accuracy(params, x, y):
+        return ((apply(params, x) > 0).astype(jnp.int32) == y).mean()
+
+    return SmallModel("sst2_text", init, apply, loss, accuracy, _bce_pe)
+
+
+def get_small_model(dataset: str) -> SmallModel:
+    table = {"mnist": mnist_mlp, "cifar10": cifar_cnn, "sst2": sst2_text}
+    try:
+        return table[dataset]()
+    except KeyError:
+        raise ValueError(f"no small model for dataset {dataset!r}")
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bits(params) -> float:
+    """Uplink payload D(w) if the raw fp32 model were transmitted."""
+    return 32.0 * param_count(params)

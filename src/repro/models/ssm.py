@@ -1,0 +1,239 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch", data-dependent decay) and
+Mamba-1 selective SSM (for the Jamba hybrid).
+
+Both expose a full-sequence form (lax.scan over time — the pure-jnp oracle
+for the Pallas chunked kernel in repro.kernels.rwkv6_wkv) and a single-step
+decode form with constant-size recurrent state, which is what makes the
+long_500k shape natively servable for these families.
+
+Simplifications vs. the reference implementations (DESIGN.md §5):
+  * RWKV6 token-shift mixing coefficients are static per channel (the
+    data-dependent *decay* w_t — the defining Finch feature — is kept, via
+    the low-rank `w_lora` path).
+  * Mamba uses the straightforward dt/B/C projections without the conv
+    channel groups; depthwise causal conv width 4 as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import DTYPE, dense, dense_init
+
+__all__ = [
+    "rwkv6_init",
+    "rwkv6_time_mix",
+    "rwkv6_channel_mix",
+    "rwkv6_decode",
+    "init_rwkv6_state",
+    "wkv6_scan_ref",
+    "mamba_init",
+    "mamba_forward",
+    "mamba_decode",
+    "init_mamba_state",
+]
+
+
+# ==========================================================================
+# RWKV6
+# ==========================================================================
+
+def rwkv6_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = cfg.n_rwkv_heads
+    ks = jax.random.split(key, 10)
+    lora = 64
+    return {
+        # time-mix (attention-replacement) --------------------------------
+        "mu": (0.5 * jnp.ones((5, d))).astype(jnp.float32),  # r,k,v,g,w shifts
+        "wr": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wg": dense_init(ks[3], d, d),
+        "wo": dense_init(ks[4], d, d),
+        "w0": jnp.full((d,), -6.0, jnp.float32),             # decay bias
+        "w_lora_a": dense_init(ks[5], d, lora, scale=0.01),
+        "w_lora_b": dense_init(ks[6], lora, d, scale=0.01),
+        "u": (jnp.zeros((h, hs))).astype(jnp.float32),       # per-head bonus
+        "ln_x": {"g": jnp.ones((d,), jnp.float32)},
+        # channel-mix (FFN-replacement) ------------------------------------
+        "mu_c": (0.5 * jnp.ones((2, d))).astype(jnp.float32),
+        "ck": dense_init(ks[7], d, cfg.d_ff),
+        "cv": dense_init(ks[8], cfg.d_ff, d),
+        "cr": dense_init(ks[9], d, d),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} along the sequence; prev fills t=0."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def wkv6_scan_ref(r, k, v, w, u, state):
+    """The WKV6 recurrence (pure-jnp oracle for the Pallas kernel).
+
+    r,k,v: (B, T, H, hs); w: (B, T, H, hs) decay in (0,1); u: (H, hs);
+    state: (B, H, hs, hs) mapping k-dim -> v-dim.
+    Returns y (B, T, H, hs), final state.
+
+        S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+        y_t[j]   = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                                # (B, H, hs)
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)              # (B, H, hs, hs)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, (rs, ks_, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _rwkv6_mix(p, cfg: ArchConfig, x, prev_tok):
+    """Shared pre-recurrence projections. Returns r,k,v,w (B,T,H,hs), g (B,T,d)."""
+    b, t, d = x.shape
+    h, hs = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    xx = _shift(x, prev_tok)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + (xx - x) * mu[i] for i in range(5))
+    r = dense(p["wr"], xr).reshape(b, t, h, hs).astype(jnp.float32)
+    k = dense(p["wk"], xk).reshape(b, t, h, hs).astype(jnp.float32)
+    v = dense(p["wv"], xv).reshape(b, t, h, hs).astype(jnp.float32)
+    g = jax.nn.silu(dense(p["wg"], xg))
+    # Data-dependent decay (Finch): w_t = exp(-exp(w0 + lora(xw))).
+    w_log = p["w0"] + dense(p["w_lora_b"], jnp.tanh(dense(p["w_lora_a"], xw))).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, t, h, hs)
+    return r, k, v, w, g
+
+
+def _rwkv6_out(p, cfg: ArchConfig, y, g, b, t):
+    d = cfg.d_model
+    yf = y.reshape(b, t, d).astype(jnp.float32)
+    # Per-head group normalization, folded to RMS over each head's channels.
+    yh = yf.reshape(b, t, cfg.n_rwkv_heads, cfg.rwkv_head_size)
+    yh = yh * jax.lax.rsqrt(jnp.mean(jnp.square(yh), -1, keepdims=True) + 1e-5)
+    yf = (yh.reshape(b, t, d) * p["ln_x"]["g"]).astype(g.dtype)
+    return dense(p["wo"], yf * g)
+
+
+def rwkv6_time_mix(p, cfg: ArchConfig, x, state, *, wkv_impl=wkv6_scan_ref):
+    """Time-mix (attention replacement) over a full sequence. x: (B, T, d).
+
+    state: {"wkv": (B,H,hs,hs), "prev_tok": (B,d)}.  Works for T == 1
+    (decode) and any prefill length.
+    """
+    b, t, _ = x.shape
+    r, k, v, w, g = _rwkv6_mix(p, cfg, x, state["prev_tok"])
+    y, s_new = wkv_impl(r, k, v, w, p["u"], state["wkv"])
+    out = _rwkv6_out(p, cfg, y, g, b, t)
+    return out, {"wkv": s_new, "prev_tok": x[:, -1, :]}
+
+
+def rwkv6_channel_mix(p, cfg: ArchConfig, x, prev_tok):
+    """Channel-mix (FFN replacement). Returns (y, new prev_tok (B, d))."""
+    xx = _shift(x, prev_tok)
+    mu_c = p["mu_c"].astype(x.dtype)
+    xk = x + (xx - x) * mu_c[0]
+    xr = x + (xx - x) * mu_c[1]
+    y = jax.nn.sigmoid(dense(p["cr"], xr)) * dense(
+        p["cv"], jnp.square(jax.nn.relu(dense(p["ck"], xk)))
+    )
+    return y, x[:, -1, :]
+
+
+def init_rwkv6_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    h, hs = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    return {
+        "wkv": jnp.zeros((batch, h, hs, hs), dtype),
+        "prev_tok": jnp.zeros((batch, cfg.d_model), DTYPE),
+    }
+
+
+def rwkv6_decode(p, cfg: ArchConfig, x, state):
+    """Single-token time-mix: x (B, 1, d). Same math, T=1."""
+    return rwkv6_time_mix(p, cfg, x, state)
+
+
+# ==========================================================================
+# Mamba-1 (selective SSM)
+# ==========================================================================
+
+def mamba_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    n = cfg.mamba_d_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, di)) * 0.2).astype(DTYPE),
+        "conv_b": jnp.zeros((di,), DTYPE),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * n),
+        "dt_proj": dense_init(ks[3], dt_rank, di, scale=dt_rank**-0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(jnp.float32),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d),
+    }
+
+
+def _mamba_ssm_inputs(p, cfg: ArchConfig, xc):
+    """xc: conv+silu output (B, T, di). Returns dt (B,T,di), b/c (B,T,N)."""
+    n = cfg.mamba_d_state
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    dbc = dense(p["x_proj"], xc)
+    dt_low, b_ssm, c_ssm = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt_low).astype(jnp.float32) + p["dt_bias"])
+    return dt, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def mamba_forward(p, cfg: ArchConfig, x, state=None):
+    """x: (B, T, d). Full-sequence selective scan."""
+    b, t, d = x.shape
+    di, n = cfg.mamba_d_inner, cfg.mamba_d_state
+    kw = cfg.mamba_d_conv
+    if state is None:
+        state = init_mamba_state(cfg, b)
+
+    xi, z = jnp.split(dense(p["in_proj"], x), 2, axis=-1)       # (B, T, di)
+    # Depthwise causal conv along T, warm-started from the cached window.
+    xpad = jnp.concatenate([state["conv"], xi], axis=1)          # (B, T+kw-1, di)
+    xc = sum(xpad[:, i : i + t, :] * p["conv_w"][i] for i in range(kw)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, b_ssm, c_ssm = _mamba_ssm_inputs(p, cfg, xc)
+    a = -jnp.exp(p["a_log"])                                     # (di, N)
+    da = jnp.exp(dt[..., None] * a)                              # (B, T, di, N)
+    dbx = dt[..., None] * b_ssm[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t                                     # (B, di, N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = state["ssm"]
+    (h_fin, ys) = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbx, 1, 0), jnp.moveaxis(c_ssm, 1, 0)),
+    )
+    y = jnp.moveaxis(ys, 0, 1) + xc.astype(jnp.float32) * p["d_skip"]
+    out = dense(p["out_proj"], (y.astype(x.dtype)) * jax.nn.silu(z))
+    new_state = {"ssm": h_fin, "conv": xpad[:, -(kw - 1):, :] if kw > 1 else state["conv"]}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int):
+    return {
+        "ssm": jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner), DTYPE),
+    }
+
+
+def mamba_decode(p, cfg: ArchConfig, x, state):
+    return mamba_forward(p, cfg, x, state)

@@ -1,0 +1,566 @@
+"""Model-zoo assembly: one decoder implementation covering all 6 assigned
+families (dense / moe / ssm / hybrid / audio / vlm).
+
+Layer-stacking strategy (compile-time critical for the 61-80 layer configs):
+layers are grouped into *stages*; each stage is a periodic pattern of
+sublayer kinds scanned over its repeats with stacked parameters, so the HLO
+contains ONE copy of each distinct sublayer body regardless of depth:
+
+  deepseek-v3 : stage0 = 3 x (mla + dense-ffn), stage1 = 58 x (mla + moe)
+  jamba       : stage0 = 4 x [8-layer block: 7 mamba + 1 attn, moe on odd]
+  qwen1.5-110b: stage0 = 80 x (gqa + dense-ffn)
+  rwkv6       : stage0 = 32 x (time-mix + channel-mix)
+
+Modes:
+  forward(..., mode="train")   -> (logits, aux)        causal LM
+  forward(..., mode="prefill") -> (logits, aux, cache) also seeds KV caches
+  decode_step(...)             -> (logits, cache)      one token, ring caches
+
+Modality frontends are stubbed per the assignment: audio gets precomputed
+encoder frames (B, Se, d); vlm gets patch embeddings (B, Np, d) spliced over
+the first Np token positions plus 3-D M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .attention import (
+    cross_attn,
+    cross_attn_init,
+    gqa_decode,
+    gqa_forward,
+    gqa_init,
+    init_kv_cache,
+    init_mla_cache,
+    mla_decode,
+    mla_forward,
+    mla_init,
+)
+from .layers import DTYPE, dense, dense_init, rmsnorm, rmsnorm_init, swiglu, swiglu_init
+from .moe import ShardCtx, moe_apply, moe_init
+from .ssm import (
+    init_mamba_state,
+    init_rwkv6_state,
+    mamba_forward,
+    mamba_init,
+    rwkv6_channel_mix,
+    rwkv6_init,
+    rwkv6_time_mix,
+)
+
+__all__ = [
+    "LayerKind",
+    "Stage",
+    "stage_plan",
+    "init_params",
+    "forward",
+    "decode_step",
+    "init_cache",
+    "lm_loss",
+    "param_count",
+]
+
+ATTN_CHUNK = 1024  # query-chunked softmax kicks in above 2x this seq length
+
+
+def _wkv_impl(cfg: ArchConfig):
+    """Select the WKV6 recurrence implementation (ref scan vs Pallas)."""
+    if cfg.rwkv_wkv_impl == "pallas":
+        from ..kernels.rwkv6_wkv.ops import wkv6_pallas
+        return wkv6_pallas
+    from .ssm import wkv6_scan_ref
+    return wkv6_scan_ref
+
+
+# ==========================================================================
+# Stage planning
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str        # "attn" | "mla" | "rwkv" | "mamba"
+    ffn: str          # "dense" | "moe" | "rwkv_cm"
+    cross: bool = False
+
+    @property
+    def tag(self) -> str:
+        return f"{self.mixer}-{self.ffn}" + ("-x" if self.cross else "")
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    pattern: tuple[LayerKind, ...]
+    repeats: int
+
+
+def _kind_of(cfg: ArchConfig, i: int, *, decoder: bool) -> LayerKind:
+    if cfg.family == "ssm":
+        return LayerKind("rwkv", "rwkv_cm")
+    if cfg.family == "hybrid":
+        mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+    elif cfg.use_mla:
+        mixer = "mla"
+    else:
+        mixer = "attn"
+    ffn = "moe" if cfg.is_moe_layer(i) else "dense"
+    cross = decoder and cfg.is_encoder_decoder
+    return LayerKind(mixer, ffn, cross)
+
+
+def _smallest_period(kinds: list[LayerKind]) -> int:
+    n = len(kinds)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(kinds[i] == kinds[i % p] for i in range(n)):
+            return p
+    return n
+
+
+def stage_plan(cfg: ArchConfig) -> list[Stage]:
+    kinds = [_kind_of(cfg, i, decoder=True) for i in range(cfg.n_layers)]
+    stages = []
+    start = 0
+    nd = cfg.n_dense_layers
+    if nd > 0 and nd < cfg.n_layers:
+        assert all(k == kinds[0] for k in kinds[:nd]), "dense prefix must be homogeneous"
+        stages.append(Stage(pattern=(kinds[0],), repeats=nd))
+        start = nd
+    rest = kinds[start:]
+    if rest:
+        p = _smallest_period(rest)
+        stages.append(Stage(pattern=tuple(rest[:p]), repeats=len(rest) // p))
+    return stages
+
+
+# ==========================================================================
+# Per-sublayer init
+# ==========================================================================
+
+def _init_sublayer(key, cfg: ArchConfig, kind: LayerKind, *, ep_size: int):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model)}
+    if kind.mixer == "attn":
+        p["attn"] = gqa_init(ks[0], cfg)
+    elif kind.mixer == "mla":
+        p["attn"] = mla_init(ks[0], cfg)
+    elif kind.mixer == "rwkv":
+        p["rwkv"] = rwkv6_init(ks[0], cfg)
+    elif kind.mixer == "mamba":
+        p["mamba"] = mamba_init(ks[0], cfg)
+    if kind.cross:
+        p["ln_c"] = rmsnorm_init(cfg.d_model)
+        p["cross"] = cross_attn_init(ks[1], cfg)
+    p["ln2"] = rmsnorm_init(cfg.d_model)
+    if kind.ffn == "dense":
+        p["ffn"] = swiglu_init(ks[2], cfg.d_model, cfg.ffn_dense)
+    elif kind.ffn == "moe":
+        p["moe"] = moe_init(ks[2], cfg, ep_size=ep_size)
+    return p
+
+
+def _init_stacked(key, cfg: ArchConfig, kind: LayerKind, repeats: int, *, ep_size: int):
+    keys = jax.random.split(key, repeats)
+    return jax.vmap(lambda k: _init_sublayer(k, cfg, kind, ep_size=ep_size))(keys)
+
+
+def init_params(cfg: ArchConfig, key, *, ep_size: int = 1):
+    """Full parameter pytree. ep_size = expert-parallel degree (pads E)."""
+    stages = stage_plan(cfg)
+    n_groups = sum(len(s.pattern) for s in stages)
+    keys = jax.random.split(key, n_groups + 6)
+    ki = 0
+    p: dict[str, Any] = {}
+    p["embed"] = {
+        "w": (jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model)) * 0.02).astype(DTYPE)
+    }
+    p["final_ln"] = rmsnorm_init(cfg.d_model)
+    p["lm_head"] = dense_init(keys[-2], cfg.d_model, cfg.vocab, scale=0.02)
+    for si, st in enumerate(stages):
+        for li, kind in enumerate(st.pattern):
+            p[f"s{si}_l{li}"] = _init_stacked(keys[ki], cfg, kind, st.repeats, ep_size=ep_size)
+            ki += 1
+    if cfg.is_encoder_decoder:
+        enc_kind = LayerKind("attn", "dense")
+        p["encoder"] = _init_stacked(keys[ki], cfg, enc_kind, cfg.n_encoder_layers, ep_size=ep_size)
+        p["enc_final_ln"] = rmsnorm_init(cfg.d_model)
+        ki += 1
+    if cfg.mtp:
+        p["mtp_ln"] = rmsnorm_init(cfg.d_model)
+        p["mtp_head"] = dense_init(keys[-3], cfg.d_model, cfg.vocab, scale=0.02)
+    return p
+
+
+# ==========================================================================
+# Sublayer forward (full sequence)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class _Extras:
+    positions: Any = None
+    mrope_pos: Any = None
+    enc_out: Any = None
+    chunk: int = 0
+
+
+def _sublayer_full(cfg, kind: LayerKind, p, x, ctx: ShardCtx, ex: _Extras, want_cache: bool):
+    """Returns (x, aux, cache_contrib)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache: Any = ()
+    h_in = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind.mixer == "attn":
+        if want_cache:
+            h, (k_, v_) = gqa_forward(
+                p["attn"], cfg, h_in, positions=ex.positions, mrope_pos=ex.mrope_pos,
+                chunk=ex.chunk, return_kv=True, ctx=ctx)
+            cache = {"k": k_, "v": v_}
+        else:
+            h = gqa_forward(p["attn"], cfg, h_in, positions=ex.positions,
+                            mrope_pos=ex.mrope_pos, chunk=ex.chunk, ctx=ctx)
+    elif kind.mixer == "mla":
+        if want_cache:
+            h, (ckv, kpe) = mla_forward(p["attn"], cfg, h_in, positions=ex.positions,
+                                        chunk=ex.chunk, return_kv=True, ctx=ctx)
+            cache = {"c_kv": ckv, "k_pe": kpe}
+        else:
+            h = mla_forward(p["attn"], cfg, h_in, positions=ex.positions,
+                            chunk=ex.chunk, ctx=ctx)
+    elif kind.mixer == "rwkv":
+        st = init_rwkv6_state(cfg, x.shape[0])
+        h, st = rwkv6_time_mix(p["rwkv"], cfg, h_in, st, wkv_impl=_wkv_impl(cfg))
+        cache = {"rwkv": st} if want_cache else ()
+    elif kind.mixer == "mamba":
+        h, st = mamba_forward(p["mamba"], cfg, h_in)
+        cache = {"mamba": st} if want_cache else ()
+    else:
+        raise ValueError(kind.mixer)
+    x = x + h
+
+    if kind.cross:
+        x = x + cross_attn(p["cross"], cfg, rmsnorm(p["ln_c"], x, cfg.norm_eps), ex.enc_out)
+
+    if kind.ffn == "dense":
+        x = x + swiglu(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    elif kind.ffn == "moe":
+        y, a = moe_apply(p["moe"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps), ctx)
+        x = x + y
+        aux = aux + a
+    elif kind.ffn == "rwkv_cm":
+        cm_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y, cm_prev = rwkv6_channel_mix(p["rwkv"], cfg, cm_in, jnp.zeros_like(x[:, 0]))
+        x = x + y
+        if want_cache:
+            cache = dict(cache, cm_prev=cm_prev)
+    return x, aux, cache
+
+
+def _run_stage_full(cfg, st: Stage, stacked_params, x, ctx, ex, want_cache):
+    """Scan the stage pattern over its repeats. stacked_params: tuple of
+    stacked trees, one per pattern position."""
+
+    def body(carry, xs):
+        x, aux = carry
+        caches = []
+        for kind, pp in zip(st.pattern, xs):
+            x, a, c = _sublayer_full(cfg, kind, pp, x, ctx, ex, want_cache)
+            aux = aux + a
+            caches.append(c)
+        return (x, aux), tuple(caches)
+
+    if st.repeats == 1:
+        (x, aux), caches = body((x, jnp.zeros((), jnp.float32)),
+                                tuple(jax.tree_util.tree_map(lambda a: a[0], sp)
+                                      for sp in stacked_params))
+        caches = tuple(jax.tree_util.tree_map(lambda a: a[None], c) for c in caches)
+        return x, aux, caches
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked_params)
+    return x, aux, caches
+
+
+# ==========================================================================
+# Embedding / frontends
+# ==========================================================================
+
+def _embed(cfg: ArchConfig, params, batch, ctx: ShardCtx):
+    tokens = batch["tokens"]
+    h = params["embed"]["w"][tokens]  # (B, S, d)
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        np_ = cfg.n_patches
+        img = batch["image_embeds"].astype(h.dtype)             # (B, Np, d)
+        pad = jnp.zeros((h.shape[0], h.shape[1] - np_, h.shape[2]), h.dtype)
+        img_full = jnp.concatenate([img, pad], axis=1)
+        is_patch = (jnp.arange(h.shape[1]) < np_)[None, :, None]
+        h = jnp.where(is_patch, img_full, h)
+    return _shard_act(h, ctx)
+
+
+def _shard_act(h, ctx: ShardCtx):
+    if ctx.mesh is None:
+        return h
+    spec = P(ctx.dp_axes, *([None] * (h.ndim - 1)))
+    return jax.lax.with_sharding_constraint(h, NamedSharding(ctx.mesh, spec))
+
+
+def _encode_audio(cfg: ArchConfig, params, frames, ctx: ShardCtx):
+    """Whisper-style encoder over stubbed conv-frontend frames (B, Se, d)."""
+    x = frames.astype(DTYPE)
+    kind = LayerKind("attn", "dense")
+
+    def body(x, pp):
+        h = gqa_forward(pp["attn"], cfg, rmsnorm(pp["ln1"], x, cfg.norm_eps), causal=False)
+        x = x + h
+        x = x + swiglu(pp["ffn"], rmsnorm(pp["ln2"], x, cfg.norm_eps))
+        return x, ()
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm(params["enc_final_ln"], x, cfg.norm_eps)
+
+
+# ==========================================================================
+# Public API: forward / loss / decode
+# ==========================================================================
+
+def forward(cfg: ArchConfig, params, batch, ctx: ShardCtx = ShardCtx(), *,
+            mode="train", cache_headroom: int = 0):
+    """mode: "train" -> (logits, aux); "prefill" -> (logits, aux, cache).
+
+    cache_headroom: extra decode slots to allocate in the prefill cache
+    (full-attention configs need >= the number of tokens you plan to decode;
+    sliding-window/SSM configs ignore it once the window is covered)."""
+    want_cache = mode == "prefill"
+    h = _embed(cfg, params, batch, ctx)
+    b, s, _ = h.shape
+    ex = _Extras(
+        positions=jnp.arange(s, dtype=jnp.int32)[None, :],
+        mrope_pos=batch.get("mrope_pos"),
+        enc_out=(
+            _encode_audio(cfg, params, batch["enc_frames"], ctx)
+            if cfg.is_encoder_decoder else None
+        ),
+        chunk=ATTN_CHUNK if s > 2 * ATTN_CHUNK else 0,
+    )
+    stages = stage_plan(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    all_caches = []
+    for si, st in enumerate(stages):
+        sp = tuple(params[f"s{si}_l{li}"] for li in range(len(st.pattern)))
+        h, a, caches = _run_stage_full(cfg, st, sp, h, ctx, ex, want_cache)
+        h = _shard_act(h, ctx)
+        aux = aux + a
+        all_caches.append(caches)
+    h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
+    logits = dense(params["lm_head"], h)
+    if ctx.mesh is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(ctx.mesh, P(ctx.dp_axes, None, "model"))
+        )
+    if mode == "train":
+        if cfg.mtp:
+            mtp_logits = dense(params["mtp_head"], rmsnorm(params["mtp_ln"], h, cfg.norm_eps))
+            return logits, aux, mtp_logits
+        return logits, aux
+    cache = _assemble_prefill_cache(cfg, all_caches, s, ex, cache_headroom)
+    return logits, aux, cache
+
+
+def lm_loss(cfg: ArchConfig, params, batch, ctx: ShardCtx = ShardCtx()):
+    """Selection-weighted causal-LM loss: the FL aggregation of eq. (34)
+    folded into the loss so the backward pass needs exactly ONE all-reduce.
+
+    batch["fl_weights"] (B,) carries alpha_n * beta_n * S_n * psi_n per
+    device-cohort (uniform 1s outside the FL context).
+    """
+    out = forward(cfg, params, batch, ctx, mode="train")
+    logits, aux = out[0], out[1]
+    labels = batch["labels"]
+    w = batch.get("fl_weights")
+    if w is None:
+        w = jnp.ones((labels.shape[0],), jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]  # (B, S)
+    wsum = jnp.maximum(w.sum(), 1e-9)
+    loss = (nll.mean(axis=-1) * w).sum() / wsum
+    if cfg.mtp:
+        mtp_logits = out[2]
+        # Predict t+2: logits[:, t] vs labels[:, t+1].
+        lp2 = jax.nn.log_softmax(mtp_logits[:, :-1].astype(jnp.float32), axis=-1)
+        nll2 = -jnp.take_along_axis(lp2, labels[:, 1:, None], axis=-1)[..., 0]
+        loss = loss + cfg.mtp_weight * (nll2.mean(axis=-1) * w).sum() / wsum
+    return loss + cfg.router_aux_coef * aux, {"aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def _empty_sublayer_cache(cfg: ArchConfig, kind: LayerKind, batch: int, cache_len: int):
+    if kind.mixer == "attn":
+        c = init_kv_cache(cfg, batch, cache_len)
+    elif kind.mixer == "mla":
+        c = init_mla_cache(cfg, batch, cache_len)
+    elif kind.mixer == "rwkv":
+        c = {"rwkv": init_rwkv6_state(cfg, batch)}
+    elif kind.mixer == "mamba":
+        c = {"mamba": init_mamba_state(cfg, batch)}
+    else:
+        raise ValueError(kind.mixer)
+    if kind.ffn == "rwkv_cm":
+        c = dict(c, cm_prev=jnp.zeros((batch, cfg.d_model), DTYPE))
+    return c
+
+
+def cache_len_for(cfg: ArchConfig, seq_len: int) -> int:
+    """Physical cache length: sliding-window archs cap at the window."""
+    if cfg.sliding_window > 0:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, *, enc_out=None):
+    """Ring-buffer caches for every layer, stacked per stage pattern slot."""
+    clen = cache_len_for(cfg, seq_len)
+    stages = stage_plan(cfg)
+    cache: dict[str, Any] = {}
+    for si, st in enumerate(stages):
+        for li, kind in enumerate(st.pattern):
+            one = _empty_sublayer_cache(cfg, kind, batch, clen)
+            cache[f"s{si}_l{li}"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (st.repeats,) + a.shape), one
+            )
+    if cfg.is_encoder_decoder:
+        assert enc_out is not None, "enc-dec decode needs encoder output"
+        cache["enc_out"] = enc_out
+    return cache
+
+
+def _ring_from_prefill(seq_tensor, s, clen, seq_axis):
+    """Place prefill entries for positions [0, s) into a clen-slot ring so
+    that position p lands at slot p % clen (matching decode's write rule)."""
+    if clen >= s:
+        pad_shape = list(seq_tensor.shape)
+        pad_shape[seq_axis] = clen - s
+        pad = jnp.zeros(pad_shape, seq_tensor.dtype)
+        return jnp.concatenate([seq_tensor, pad], axis=seq_axis)
+    taken = jax.lax.slice_in_dim(seq_tensor, s - clen, s, axis=seq_axis)
+    return jnp.roll(taken, s % clen, axis=seq_axis)
+
+
+def _ring_positions(s, clen, repeats):
+    if clen >= s:
+        pos = jnp.concatenate(
+            [jnp.arange(s, dtype=jnp.int32), jnp.full((clen - s,), -1, jnp.int32)]
+        )
+    else:
+        pos = jnp.roll(jnp.arange(s - clen, s, dtype=jnp.int32), s % clen)
+    return jnp.broadcast_to(pos, (repeats, clen))
+
+
+def _assemble_prefill_cache(cfg, all_caches, s, ex, headroom):
+    """Convert prefill-collected K/V + states into decode ring caches."""
+    stages = stage_plan(cfg)
+    clen = cache_len_for(cfg, s + headroom)
+    cache: dict[str, Any] = {}
+    for si, st in enumerate(stages):
+        for li, kind in enumerate(st.pattern):
+            got = all_caches[si][li]
+            if kind.mixer == "attn":
+                c = {
+                    "k": _ring_from_prefill(got["k"], s, clen, 2),
+                    "v": _ring_from_prefill(got["v"], s, clen, 2),
+                    "pos": _ring_positions(s, clen, st.repeats),
+                    "idx": jnp.full((st.repeats,), s, jnp.int32),
+                }
+            elif kind.mixer == "mla":
+                c = {
+                    "c_kv": _ring_from_prefill(got["c_kv"], s, clen, 2),
+                    "k_pe": _ring_from_prefill(got["k_pe"], s, clen, 2),
+                    "pos": _ring_positions(s, clen, st.repeats),
+                    "idx": jnp.full((st.repeats,), s, jnp.int32),
+                }
+            elif kind.mixer == "rwkv":
+                c = {"rwkv": got["rwkv"]}
+            else:
+                c = {"mamba": got["mamba"]}
+            if kind.ffn == "rwkv_cm":
+                c = dict(c, cm_prev=got["cm_prev"])
+            cache[f"s{si}_l{li}"] = c
+    if cfg.is_encoder_decoder:
+        cache["enc_out"] = ex.enc_out
+    return cache
+
+
+def _sublayer_decode(cfg, kind: LayerKind, p, x, c, cur_pos, ctx, ex):
+    h_in = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind.mixer == "attn":
+        h, c2 = gqa_decode(p["attn"], cfg, h_in, c, cur_pos, mrope_pos=ex.mrope_pos)
+        new_c = c2
+    elif kind.mixer == "mla":
+        h, new_c = mla_decode(p["attn"], cfg, h_in, c, cur_pos)
+    elif kind.mixer == "rwkv":
+        h, st = rwkv6_time_mix(p["rwkv"], cfg, h_in, c["rwkv"])
+        new_c = dict(c, rwkv=st)
+    else:
+        h, st = mamba_forward(p["mamba"], cfg, h_in, c["mamba"])
+        new_c = dict(c, mamba=st)
+    x = x + h
+    if kind.cross:
+        x = x + cross_attn(p["cross"], cfg, rmsnorm(p["ln_c"], x, cfg.norm_eps), ex.enc_out)
+    if kind.ffn == "dense":
+        x = x + swiglu(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    elif kind.ffn == "moe":
+        y, _ = moe_apply(p["moe"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps), ctx)
+        x = x + y
+    elif kind.ffn == "rwkv_cm":
+        cm_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y, prev = rwkv6_channel_mix(p["rwkv"], cfg, cm_in, c["cm_prev"])
+        x = x + y
+        new_c = dict(new_c, cm_prev=prev)
+    return x, new_c
+
+
+def decode_step(cfg: ArchConfig, params, batch, cache, ctx: ShardCtx = ShardCtx()):
+    """One-token decode. batch: {"token": (B,1) int32, "pos": () int32,
+    optional "mrope_pos": (B,1,3)}. Returns (logits (B,1,V), new cache)."""
+    tok = batch["token"]
+    cur_pos = batch["pos"]
+    h = params["embed"]["w"][tok]
+    h = _shard_act(h, ctx)
+    ex = _Extras(mrope_pos=batch.get("mrope_pos"), enc_out=cache.get("enc_out"))
+    stages = stage_plan(cfg)
+    new_cache: dict[str, Any] = {}
+
+    for si, st in enumerate(stages):
+        sp = tuple(params[f"s{si}_l{li}"] for li in range(len(st.pattern)))
+        sc = tuple(cache[f"s{si}_l{li}"] for li in range(len(st.pattern)))
+
+        def body(x, xs):
+            pslices, cslices = xs
+            new_cs = []
+            for kind, pp, cc in zip(st.pattern, pslices, cslices):
+                x, nc = _sublayer_decode(cfg, kind, pp, x, cc, cur_pos, ctx, ex)
+                new_cs.append(nc)
+            return x, tuple(new_cs)
+
+        if st.repeats == 1:
+            sp1 = tuple(jax.tree_util.tree_map(lambda a: a[0], t) for t in sp)
+            sc1 = tuple(jax.tree_util.tree_map(lambda a: a[0], t) for t in sc)
+            h, ncs = body(h, (sp1, sc1))
+            ncs = tuple(jax.tree_util.tree_map(lambda a: a[None], c) for c in ncs)
+        else:
+            h, ncs = jax.lax.scan(body, h, (sp, sc))
+        for li in range(len(st.pattern)):
+            new_cache[f"s{si}_l{li}"] = ncs[li]
+
+    if cfg.is_encoder_decoder:
+        new_cache["enc_out"] = cache["enc_out"]
+    h = rmsnorm(params["final_ln"], h, cfg.norm_eps)
+    logits = dense(params["lm_head"], h)
+    return logits, new_cache
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

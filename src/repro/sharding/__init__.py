@@ -1,0 +1,7 @@
+from .partition import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+    param_spec,
+)

@@ -1,0 +1,223 @@
+"""Parameter / optimizer-state / cache sharding rules for the production mesh.
+
+Logical layout (megatron-style):
+  * fan-out projections (wq/wk/wv, ffn gate/up, moe experts, embed vocab)
+    shard their OUTPUT dim on `model`;
+  * fan-in projections (wo, ffn down) shard their INPUT dim on `model`;
+  * experts additionally shard the leading expert dim on `model`
+    (expert parallelism; see repro.models.moe);
+  * everything small (norms, biases, routers, loras) is replicated;
+  * stacked per-layer leading dims (from scan-over-layers) are never sharded;
+  * a dim is sharded only when divisible by the axis size — odd vocabularies
+    (whisper's 51865) fall back to replicated rather than uneven shards.
+
+Activations are constrained only at the residual stream and logits
+(see repro.models.transformer._shard_act); attention internals are left to
+GSPMD so head counts that don't divide the axis (qwen2's 28) still lower.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_spec",
+    "param_shardings",
+    "opt_state_shardings",
+    "cache_shardings",
+    "batch_shardings",
+]
+
+MODEL_AXIS = "model"
+
+# (match keys in path, base spec builder). First match wins; specs are for
+# the *unstacked* trailing dims of the leaf.
+_FANOUT_2D = ("wq", "wk", "wv", "gate", "up", "fc", "q_up", "kv_up",
+              "wr", "wg", "ck", "cr", "in_proj", "dt_proj", "lm_head", "mtp_head",
+              "w_lora_b")
+_FANIN_2D = ("wo", "down", "proj", "out_proj", "cv")
+_REPLICATED = ("router", "q_down", "kv_down", "w_lora_a", "x_proj")
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return names
+
+
+def _divisible(n: int, mesh: Mesh) -> bool:
+    return n % mesh.shape[MODEL_AXIS] == 0
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    """Base spec for the trailing dims + None-padding for stacked dims."""
+    names = _path_names(path)
+    shape = leaf.shape
+    ndim = len(shape)
+
+    def pad(base: tuple) -> P:
+        return P(*([None] * (ndim - len(base)) + list(base)))
+
+    # --- embeddings -------------------------------------------------------
+    if "embed" in names:
+        if ndim >= 2 and _divisible(shape[-2], mesh):
+            return pad((MODEL_AXIS, None))
+        return pad((None, None))
+
+    # --- MoE expert banks: (E, d, ff) / (E, ff, d) --------------------------
+    if names[-1] in ("gate", "up", "down") and ndim >= 3 and "shared" not in names:
+        if _divisible(shape[-3], mesh):
+            return pad((MODEL_AXIS, None, None))
+        return pad((None, None, None))
+
+    # --- shared experts: REPLICATED (§Perf iteration 3) ---------------------
+    # deepseek's shared expert is tiny (3 x d x 2048 ~ 88 MB bf16); sharding
+    # it megatron-style costs a full (B,S,d) all-reduce per MoE layer, which
+    # dwarfs the redundant-compute cost of just replicating the weights.
+    if "shared" in names:
+        return P(*([None] * ndim))
+
+    parent = names[-2] if len(names) >= 2 else ""
+    leafname = names[-1]
+    key = parent if leafname in ("w", "b") else leafname
+
+    if key in _REPLICATED:
+        return P(*([None] * ndim))
+    if key in _FANOUT_2D:
+        if leafname == "b" or ndim < 2:
+            ax = MODEL_AXIS if _divisible(shape[-1], mesh) else None
+            return pad((ax,))
+        ax = MODEL_AXIS if _divisible(shape[-1], mesh) else None
+        return pad((None, ax))
+    if key in _FANIN_2D:
+        if leafname == "b" or ndim < 2:
+            return pad((None,))
+        ax = MODEL_AXIS if _divisible(shape[-2], mesh) else None
+        return pad((ax, None))
+    if key == "conv_w":  # (kw, d_inner)
+        ax = MODEL_AXIS if _divisible(shape[-1], mesh) else None
+        return pad((None, ax))
+    if key in ("a_log",):  # (d_inner, N)
+        ax = MODEL_AXIS if _divisible(shape[-2], mesh) else None
+        return pad((ax, None))
+    if key in ("dt_bias", "d_skip", "conv_b"):
+        ax = MODEL_AXIS if _divisible(shape[-1], mesh) else None
+        return pad((ax,))
+    # norms, mu, u, w0, scalars, everything else: replicated.
+    return P(*([None] * ndim))
+
+
+def param_shardings(param_shapes, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        param_shapes,
+    )
+
+
+def opt_state_shardings(opt_state_shapes, param_shardings_tree, mesh: Mesh):
+    """Mirror parameter specs onto optimizer moments.
+
+    Works structurally: any state leaf whose shape equals the corresponding
+    parameter's (mu/nu/momentum) inherits its spec; adafactor's factored
+    (row/col) moments get the param spec with the corresponding dim removed;
+    scalars are replicated.
+    """
+    flat_params = {
+        tuple(_path_names(p)): s
+        for p, s in jax.tree_util.tree_leaves_with_path(param_shardings_tree)
+    }
+
+    def match(path, leaf):
+        names = tuple(_path_names(path))
+        # Strip the optimizer-state wrapper prefix (e.g. ('mu',...) / (0,'row',...)).
+        for start in range(len(names)):
+            if names[start:] in flat_params:
+                pspec = flat_params[names[start:]].spec
+                if len(pspec) == leaf.ndim:
+                    return NamedSharding(mesh, pspec)
+                if len(pspec) == leaf.ndim + 1:  # factored row: drop last dim
+                    return NamedSharding(mesh, P(*pspec[:-1]))
+            # factored col: param path matches but shape is (..., cols)
+        # fall back: find a param whose path suffix matches ignoring the
+        # state-kind component (row/col indices differ in shape).
+        for start in range(len(names)):
+            suffix = names[start:]
+            for ppath, psh in flat_params.items():
+                if ppath == suffix:
+                    return psh
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(match, opt_state_shapes)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, dp_axes) -> Any:
+    """Decode caches: shard the cache-length dim on `model` (robust for any
+    kv-head count), batch on the data axes, recurrent states on `model`
+    along heads/channels."""
+    dp = tuple(dp_axes)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    m = mesh.shape[MODEL_AXIS]
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        nd = len(shape)
+        name = names[-1]
+
+        def ax_b(i):  # batch dim at index i (after leading stack dim)
+            return dp if shape[i] % dp_total == 0 else None
+
+        if name in ("k", "v"):            # (R, B, C, Hkv, dh)
+            c_ax = MODEL_AXIS if shape[2] % m == 0 else None
+            return P(None, ax_b(1), c_ax, None, None)
+        if name in ("c_kv", "k_pe"):      # (R, B, C, r)
+            c_ax = MODEL_AXIS if shape[2] % m == 0 else None
+            return P(None, ax_b(1), c_ax, None)
+        if name == "wkv":                 # (R, B, H, hs, hs)
+            h_ax = MODEL_AXIS if shape[2] % m == 0 else None
+            return P(None, ax_b(1), h_ax, None, None)
+        if name == "ssm":                 # (R, B, di, N)
+            d_ax = MODEL_AXIS if shape[2] % m == 0 else None
+            return P(None, ax_b(1), d_ax, None)
+        if name == "conv":                # (R, B, kw-1, di)
+            d_ax = MODEL_AXIS if shape[3] % m == 0 else None
+            return P(None, ax_b(1), None, d_ax)
+        if name in ("prev_tok", "cm_prev"):  # (R, B, d)
+            return P(None, ax_b(1), None)
+        if name == "enc_out":             # (B, Se, d) -- unstacked
+            b_ax = dp if shape[0] % dp_total == 0 else None
+            return P(b_ax, None, None)
+        if name in ("pos", "idx"):
+            return P(*([None] * nd))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec(p, l)), cache_shapes
+    )
+
+
+def batch_shardings(batch_shapes, mesh: Mesh, dp_axes):
+    """Input batches: batch dim on the data axes (replicated if indivisible,
+    e.g. long_500k's batch of 1)."""
+    dp = tuple(dp_axes)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        if leaf.ndim == 0:
+            return P()
+        b_ax = dp if shape[0] % dp_total == 0 else None
+        return P(b_ax, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec(p, l)), batch_shapes
+    )

@@ -1,0 +1,13 @@
+from .optimizer import (
+    Optimizer,
+    adafactor,
+    adam,
+    adamw,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+    momentum,
+    sgd,
+)

@@ -1,0 +1,226 @@
+"""Pure-JAX optimizers (no optax available offline).
+
+Minimal GradientTransformation-style API:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Implemented: sgd, momentum, adam, adamw, adafactor (factored second moment,
+for the >=100B dry-run configs where Adam state would not fit HBM), plus
+clip_by_global_norm and chain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "apply_updates",
+    "sgd",
+    "momentum",
+    "adam",
+    "adamw",
+    "adafactor",
+    "clip_by_global_norm",
+    "chain",
+    "global_norm",
+    "make_optimizer",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        new_m = jax.tree_util.tree_map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: -lr * (beta * m + g), new_m, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(z, params),
+            nu=jax.tree_util.tree_map(z, params),
+        )
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        grads32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads32)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads32
+        )
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        upd = jax.tree_util.tree_map(
+            lambda m, v: -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return upd, AdamState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, wd: float = 0.01
+) -> Optimizer:
+    base = adam(lr, b1, b2, eps)
+
+    def update(grads, state, params):
+        upd, state = base.update(grads, state, params)
+        upd = jax.tree_util.tree_map(
+            lambda u, p: u - lr * wd * p.astype(jnp.float32), upd, params
+        )
+        return upd, state
+
+    return Optimizer(base.init, update)
+
+
+class AdafactorState(NamedTuple):
+    count: jax.Array
+    row: Any   # per-leaf row second moments (or full moment for <2D leaves)
+    col: Any
+
+
+def adafactor(
+    lr: float = 1e-2, eps: float = 1e-30, clip_threshold: float = 1.0, decay: float = 0.8
+) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), memory
+    O(rows+cols) per matrix. Used for the >=100B-parameter dry-run configs."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def rows(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, dtype=jnp.float32)
+
+        def cols(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(
+            count=jnp.zeros((), jnp.int32),
+            row=jax.tree_util.tree_map(rows, params),
+            col=jax.tree_util.tree_map(cols, params),
+        )
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def upd_leaf(g, r, c, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                new_r = beta * r + (1 - beta) * g2.mean(axis=-1)
+                new_c = beta * c + (1 - beta) * g2.mean(axis=-2)
+                denom = new_r.mean(axis=-1, keepdims=True)
+                vr = new_r / jnp.maximum(denom, eps)
+                u = g / jnp.sqrt(vr)[..., None] / jnp.sqrt(jnp.maximum(new_c, eps))[..., None, :]
+            else:
+                new_r = beta * r + (1 - beta) * g2
+                new_c = c
+                u = g / jnp.sqrt(jnp.maximum(new_r, eps))
+            scale = jnp.maximum(1.0, jnp.sqrt(jnp.mean(jnp.square(u))) / clip_threshold)
+            return -lr * u / scale, new_r, new_c
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_r = jax.tree_util.tree_leaves(state.row)
+        flat_c = jax.tree_util.tree_leaves(state.col)
+        flat_p = jax.tree_util.tree_leaves(params if params is not None else grads)
+        out = [upd_leaf(g, r, c, p) for g, r, c, p in zip(flat_g, flat_r, flat_c, flat_p)]
+        upd = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        row = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        col = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return upd, AdafactorState(count=count, row=row, col=col)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params=None):
+        new_states = []
+        for o, s in zip(opts, state):
+            grads, s = o.update(grads, s, params)
+            new_states.append(s)
+        return grads, tuple(new_states)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    table = {
+        "sgd": sgd,
+        "momentum": momentum,
+        "adam": adam,
+        "adamw": adamw,
+        "adafactor": adafactor,
+    }
+    try:
+        return table[name](lr, **kw)
+    except KeyError:
+        raise ValueError(f"unknown optimizer {name!r}; choose from {sorted(table)}")

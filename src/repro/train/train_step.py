@@ -1,0 +1,78 @@
+"""Distributed training / serving steps for the model zoo.
+
+train_step folds the paper's eq.-(34) aggregation into the loss: each data
+shard is a device-cohort whose contribution is scaled by its Stackelberg
+selection weight (batch["fl_weights"]), so the weighted FedAvg aggregate
+emerges from the single gradient all-reduce XLA inserts across the
+data/pod axes — no separate aggregation pass.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.moe import ShardCtx
+from ..models.transformer import decode_step, forward, lm_loss
+from .optimizer import Optimizer, apply_updates, global_norm
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step"]
+
+
+def make_train_step(cfg: ArchConfig, opt: Optimizer, ctx: ShardCtx = ShardCtx(),
+                    *, remat: bool = True, clip_norm: float = 1.0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(cfg, params, batch, ctx)
+
+    if remat:
+        # Save matmul outputs AND the MoE psum outputs ("moe_out"): the
+        # latter keeps rematerialization from re-running the expert-combine
+        # all-reduce in the backward pass (§Perf iteration on MoE archs).
+        policy = jax.checkpoint_policies.save_from_both_policies(
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            jax.checkpoint_policies.save_only_these_names("moe_out"),
+        )
+        loss_fn = jax.checkpoint(loss_fn, policy=policy)
+
+    def train_step(params, opt_state, batch):
+        (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        gnorm = global_norm(grads)
+        if clip_norm > 0:
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, "aux": extras["aux"]}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, ctx: ShardCtx = ShardCtx()):
+    """prefill_step(params, batch) -> (last_logits, cache)."""
+
+    def prefill_step(params, batch):
+        logits, _, cache = forward(cfg, params, batch, ctx, mode="prefill")
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, ctx: ShardCtx = ShardCtx()):
+    """serve_step(params, batch, cache) -> (next_token, logits, cache).
+
+    ONE new token against the existing KV/state cache (greedy sampling; the
+    decode shapes of the assignment lower exactly this function).
+    """
+
+    def serve_step(params, batch, cache):
+        logits, cache = decode_step(cfg, params, batch, cache, ctx)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+
+    return serve_step

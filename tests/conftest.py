@@ -1,0 +1,14 @@
+"""Shared test config. NOTE: no XLA_FLAGS here — smoke tests must see the
+host's real (single) device; only the dry-run forces 512 placeholder
+devices, in its own process."""
+import numpy as np
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,103 @@
+"""AoU state machine (eq. 6-7) + Algorithm 3 device selection."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    init_aou,
+    priority_list,
+    select_aou_alg3,
+    select_topk,
+    step_aou,
+)
+
+
+@given(
+    n=st.integers(2, 30),
+    rounds=st.integers(1, 20),
+    seed=st.integers(0, 9999),
+)
+def test_aou_invariants(n, rounds, seed):
+    """Ages >= 1; transmitted resets to 1; skipped increments by exactly 1;
+    age never exceeds rounds since last transmission + 1."""
+    rng = np.random.default_rng(seed)
+    st_ = init_aou(n)
+    last_tx = np.full(n, -1)
+    for t in range(rounds):
+        tx = rng.uniform(size=n) < 0.3
+        st_ = step_aou(st_, tx)
+        last_tx[tx] = t
+        # age = rounds since last transmission + 1 (never-transmitted: t+2
+        # because the initial age already was 1 before round 0).
+        expect = np.where(last_tx >= 0, t - last_tx + 1, t + 2)
+        np.testing.assert_array_equal(st_.age, expect)
+        assert np.all(st_.age >= 1)
+        w = st_.weights
+        assert abs(w.sum() - 1.0) < 1e-12
+        assert np.all(w > 0)
+
+
+def test_weights_prioritize_stale():
+    st_ = init_aou(3)
+    st_ = step_aou(st_, np.array([True, False, False]))   # ages 1,2,2
+    st_ = step_aou(st_, np.array([True, False, True]))    # ages 1,3,1
+    assert st_.age.tolist() == [1, 3, 1]
+    assert np.argmax(st_.weights) == 1
+
+
+@given(seed=st.integers(0, 9999))
+def test_priority_list_is_sorted(seed):
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(size=12)
+    beta = rng.integers(1, 100, 12).astype(float)
+    order = priority_list(alpha, beta)
+    prio = alpha * beta
+    assert np.all(np.diff(prio[order]) <= 1e-12)
+
+
+def _instance(rng, k=4, n=12, frac_bad=0.5):
+    gamma = rng.exponential(size=(k, n)) * 5
+    feas = rng.uniform(size=(k, n)) > frac_bad
+    alpha = rng.uniform(0.01, 1, n)
+    beta = rng.integers(1, 100, n).astype(float)
+    return alpha, beta, gamma, feas
+
+
+@given(seed=st.integers(0, 9999))
+@settings(max_examples=30)
+def test_alg3_no_worse_participation_than_topk(seed):
+    """Algorithm 3's replacement loop can only increase the number of
+    transmitting devices vs. plain top-K (the paper's Fig. 7 mechanism)."""
+    rng = np.random.default_rng(seed)
+    alpha, beta, gamma, feas = _instance(rng)
+    a3 = select_aou_alg3(alpha, beta, gamma, feas, np.random.default_rng(0))
+    tk = select_topk(alpha, beta, gamma, feas, np.random.default_rng(0))
+    assert a3.transmitted.sum() >= tk.transmitted.sum()
+    assert a3.selected.sum() <= gamma.shape[0]
+
+
+@given(seed=st.integers(0, 9999))
+def test_selection_consistency(seed):
+    """Transmitted implies selected + assigned; channels are exclusive."""
+    rng = np.random.default_rng(seed)
+    alpha, beta, gamma, feas = _instance(rng)
+    out = select_aou_alg3(alpha, beta, gamma, feas, np.random.default_rng(1))
+    assert np.all(out.selected[out.transmitted])
+    ch = out.channel_of[out.transmitted]
+    assert np.all(ch >= 0)
+    assert len(set(ch.tolist())) == len(ch)  # one device per sub-channel
+    # transmitted devices sit on Prop-1-feasible pairs
+    ids = np.where(out.transmitted)[0]
+    assert np.all(feas[out.channel_of[ids], ids])
+
+
+def test_alg3_replaces_infeasible_with_next_priority():
+    """Deterministic scenario: top device has no feasible channel and must
+    be replaced by the next one in the priority list."""
+    alpha = np.array([1.0, 0.5, 0.4, 0.3])
+    beta = np.ones(4)
+    gamma = np.ones((2, 4))
+    feas = np.array([[False, True, True, True],
+                     [False, True, True, True]])
+    out = select_aou_alg3(alpha, beta, gamma, feas, np.random.default_rng(0))
+    assert not out.transmitted[0]
+    assert out.transmitted[[1, 2]].all()

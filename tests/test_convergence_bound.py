@@ -1,0 +1,87 @@
+"""Proposition 3: convergence-bound behaviour + a measured strongly-convex
+FL run staying under its bound."""
+import numpy as np
+import pytest
+
+from repro.core import convergence_bound, participation_deficit
+
+
+def test_deficit():
+    beta = np.array([10.0, 20.0, 30.0])
+    assert participation_deficit(beta, np.array([1, 1, 1])) == 0.0
+    assert participation_deficit(beta, np.array([0, 1, 0])) == 40.0
+
+
+def test_full_participation_recovers_classic_rate():
+    """With zero deficits the bound is the classic (1-mu/L)^t decay."""
+    t = 20
+    b = convergence_bound(
+        gap0=1.0,
+        grad_sq_norms=np.ones(t),
+        deficits=np.zeros(t),
+        beta_total=100.0,
+        mu=1.0, lips=4.0, rho=1.0,
+    )
+    np.testing.assert_allclose(b, (1 - 0.25) ** np.arange(1, t + 1))
+
+
+def test_more_participation_tightens_bound():
+    t = 30
+    g = np.ones(t)
+    lo = convergence_bound(1.0, g, np.full(t, 10.0), 100.0, mu=1, lips=4, rho=1)
+    hi = convergence_bound(1.0, g, np.full(t, 60.0), 100.0, mu=1, lips=4, rho=1)
+    assert np.all(lo <= hi)
+
+
+def test_bound_holds_on_quadratic_fl():
+    """Distributed quadratic F(w) = mean_i 0.5||a_i^T w - y_i||^2: run FedAvg
+    with partial participation at lr=1/L and check the measured gap stays
+    under eq. (40)."""
+    rng = np.random.default_rng(0)
+    n_dev, d = 8, 5
+    beta = rng.integers(5, 20, n_dev)
+    data = [
+        (rng.normal(size=(b, d)), rng.normal(size=(b,)))
+        for b in beta
+    ]
+    a_all = np.concatenate([a for a, _ in data])
+    y_all = np.concatenate([y for _, y in data])
+    n_tot = len(y_all)
+
+    h = a_all.T @ a_all / n_tot
+    eigs = np.linalg.eigvalsh(h)
+    mu, lips = max(eigs.min(), 1e-3), eigs.max()
+    w_star = np.linalg.lstsq(a_all, y_all, rcond=None)[0]
+
+    def f_global(w):
+        r = a_all @ w - y_all
+        return 0.5 * float(r @ r) / n_tot
+
+    def grad_local(w, a, y):
+        return a.T @ (a @ w - y) / len(y)
+
+    # rho: max_i ||grad_i||^2 <= rho ||grad F||^2 over the trajectory -> measure.
+    w = rng.normal(size=d)
+    gap0 = f_global(w) - f_global(w_star)
+    lr = 1.0 / lips
+    t_max = 40
+    gaps, gnorms, defs, rho = [], [], [], 1.0
+    for t in range(t_max):
+        g_full = a_all.T @ (a_all @ w - y_all) / n_tot
+        gnorms.append(float(g_full @ g_full))
+        tx = rng.uniform(size=n_dev) < 0.6
+        if not tx.any():
+            tx[rng.integers(n_dev)] = True
+        defs.append(float((beta * (~tx)).sum()))
+        for i in np.where(tx)[0]:
+            a, y = data[i]
+            for j in range(len(y)):
+                gi = a[j] * (a[j] @ w - y[j])
+                rho = max(rho, float(gi @ gi) / max(gnorms[-1], 1e-12))
+        num = sum(beta[i] * (w - lr * grad_local(w, *data[i])) for i in np.where(tx)[0])
+        w = num / beta[tx].sum()
+        gaps.append(f_global(w) - f_global(w_star))
+
+    bound = convergence_bound(gap0, np.array(gnorms), np.array(defs),
+                              float(beta.sum()), mu=mu, lips=lips, rho=rho)
+    assert np.all(np.array(gaps) <= bound * (1 + 1e-6) + 1e-9)

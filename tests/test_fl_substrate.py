@@ -1,0 +1,204 @@
+"""FL substrate: datasets/partition, aggregation (eq. 34), optimizers, and a
+short end-to-end simulation per dataset."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RoundPolicy
+from repro.data.fl_datasets import make_dataset, partition_imbalanced_iid
+from repro.data.pipeline import synthetic_lm_stream
+from repro.fl import SimConfig, aggregate, run_simulation
+from repro.train.optimizer import (
+    adafactor, adam, adamw, apply_updates, make_optimizer, momentum, sgd)
+
+
+# --------------------------------------------------------------------------
+# data
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,n", [("mnist", 200), ("cifar10", 100), ("sst2", 150)])
+def test_datasets_shapes(name, n, rng):
+    ds = make_dataset(name, rng, n=n)
+    assert ds.n == n
+    assert ds.y.min() >= 0 and ds.y.max() < ds.n_classes
+    if name == "mnist":
+        assert ds.x.shape == (n, 784)
+    elif name == "cifar10":
+        assert ds.x.shape == (n, 32, 32, 3)
+    else:
+        assert ds.x.shape[1] == 32 and ds.x.dtype == np.int32
+
+
+@given(n_samples=st.integers(50, 1000), n_devices=st.integers(2, 30),
+       seed=st.integers(0, 999))
+@settings(max_examples=20)
+def test_partition_imbalanced_iid(n_samples, n_devices, seed):
+    rng = np.random.default_rng(seed)
+    part = partition_imbalanced_iid(rng, n_samples, n_devices)
+    assert part.n_devices == n_devices
+    assert part.beta.sum() <= n_samples
+    assert np.all(part.beta >= 1)
+    all_idx = np.concatenate(part.indices)
+    assert len(np.unique(all_idx)) == len(all_idx)  # disjoint
+
+
+def test_partition_deterministic():
+    p1 = partition_imbalanced_iid(np.random.default_rng(5), 300, 10)
+    p2 = partition_imbalanced_iid(np.random.default_rng(5), 300, 10)
+    np.testing.assert_array_equal(p1.beta, p2.beta)
+
+
+def test_lm_stream_deterministic():
+    a = next(synthetic_lm_stream(1, 2, 16, 100))
+    b = next(synthetic_lm_stream(1, 2, 16, 100))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+# --------------------------------------------------------------------------
+# aggregation (eq. 34)
+# --------------------------------------------------------------------------
+
+def test_aggregate_weighted_mean():
+    g = {"w": jnp.zeros((3,))}
+    clients = {"w": jnp.asarray([[1.0, 1, 1], [3.0, 3, 3], [100.0, 100, 100]])}
+    out = aggregate(g, clients, jnp.asarray([1.0, 1.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.0)
+
+
+def test_aggregate_zero_weights_keeps_global():
+    g = {"w": jnp.full((3,), 7.0)}
+    clients = {"w": jnp.ones((2, 3))}
+    out = aggregate(g, clients, jnp.zeros((2,)))
+    np.testing.assert_allclose(np.asarray(out["w"]), 7.0)
+
+
+@given(seed=st.integers(0, 999), k=st.integers(1, 6))
+@settings(max_examples=15)
+def test_aggregate_convexity(seed, k):
+    """Aggregate lies in the convex hull of client params (eq. 34 is a
+    convex combination)."""
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.normal(size=(k, 4)))
+    w = jnp.asarray(np.abs(rng.normal(size=k)) + 0.01)
+    out = aggregate({"x": jnp.zeros(4)}, {"x": c}, w)["x"]
+    assert np.all(np.asarray(out) <= np.asarray(c.max(0)) + 1e-6)
+    assert np.all(np.asarray(out) >= np.asarray(c.min(0)) - 1e-6)
+
+
+# --------------------------------------------------------------------------
+# optimizers
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(0.1), lambda: momentum(0.05), lambda: adam(0.1),
+    lambda: adamw(0.1, wd=0.0), lambda: adafactor(0.5),
+])
+def test_optimizers_descend_quadratic(make):
+    opt = make()
+    params = {"w": jnp.asarray([3.0, -2.0]), "m": jnp.ones((2, 2))}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum((p["m"] - 1.0) ** 2)
+
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_make_optimizer_unknown():
+    with pytest.raises(ValueError):
+        make_optimizer("lion", 1e-3)
+
+
+# --------------------------------------------------------------------------
+# end-to-end simulation (short)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dataset,n", [("mnist", 300), ("sst2", 300)])
+def test_sim_loss_decreases(dataset, n):
+    h = run_simulation(SimConfig(dataset=dataset, rounds=25, n_samples=n,
+                                 eval_every=5, local_steps=6,
+                                 lr=0.05 if dataset == "sst2" else None))
+    assert h.global_loss[-1] < h.global_loss[0] * 0.9
+    assert np.all(h.n_transmitted <= 4)
+    assert h.cum_time_s[-1] > 0
+
+
+def test_sim_policies_all_run():
+    for ds in ("alg3", "aou_topk", "random", "cluster", "fixed"):
+        h = run_simulation(SimConfig(dataset="mnist", rounds=4, n_samples=120,
+                                     policy=RoundPolicy(ds=ds), eval_every=2))
+        assert np.isfinite(h.global_loss).all(), ds
+
+
+def test_sim_deterministic():
+    a = run_simulation(SimConfig(dataset="mnist", rounds=6, n_samples=120, eval_every=3))
+    b = run_simulation(SimConfig(dataset="mnist", rounds=6, n_samples=120, eval_every=3))
+    np.testing.assert_allclose(a.global_loss, b.global_loss, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    cfg = get_config("qwen2-7b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    p = str(tmp_path / "ckpt.npz")
+    save_checkpoint(p, params, step=7)
+    restored, step = restore_checkpoint(p, params)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# --------------------------------------------------------------------------
+# non-IID (Dirichlet) partition extension
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 500), alpha=st.floats(0.05, 2.0))
+@settings(max_examples=15)
+def test_partition_dirichlet(seed, alpha):
+    from repro.data.fl_datasets import partition_dirichlet
+
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 400).astype(np.int32)
+    part = partition_dirichlet(rng, labels, 8, alpha)
+    assert part.n_devices == 8
+    assert np.all(part.beta >= 1)
+    all_idx = np.concatenate(part.indices)
+    # near-complete coverage (only the empty-device guard can duplicate)
+    assert len(all_idx) >= 395
+
+
+def test_sim_dirichlet_runs():
+    h = run_simulation(SimConfig(dataset="mnist", rounds=6, n_samples=200,
+                                 partition="dirichlet", eval_every=3))
+    assert np.isfinite(h.global_loss).all()
+
+
+# --------------------------------------------------------------------------
+# hierarchical (multi-cell) extension
+# --------------------------------------------------------------------------
+
+def test_hierarchical_two_cells():
+    from repro.fl import HierSimConfig, run_hierarchical
+
+    out = run_hierarchical(HierSimConfig(rounds=8, n_samples=200))
+    assert out["loss"].shape == (8,)
+    assert np.isfinite(out["loss"]).all()
+    assert out["loss"][-1] < out["loss"][0]

@@ -1,0 +1,80 @@
+"""Algorithm 2 (swap matching): stability (Def. 3), convergence, quality."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    U_MAX,
+    is_two_sided_exchange_stable,
+    random_assignment,
+    swap_matching,
+)
+from repro.core.matching import prepare_utility
+
+
+def _random_instance(rng, k, n_sel, infeasible_frac=0.3):
+    gamma = rng.exponential(size=(k, n_sel)) * 5
+    feas = rng.uniform(size=(k, n_sel)) > infeasible_frac
+    return gamma, feas
+
+
+@given(
+    k=st.integers(2, 8),
+    seed=st.integers(0, 10_000),
+    infeasible=st.floats(0.0, 0.8),
+)
+@settings(max_examples=40)
+def test_result_is_2es(k, seed, infeasible):
+    """Definition 3: no swap-blocking pair remains at termination."""
+    rng = np.random.default_rng(seed)
+    gamma, feas = _random_instance(rng, k, k, infeasible)
+    res = swap_matching(gamma, feas, rng)
+    gamma_u = prepare_utility(gamma, feas)
+    assert is_two_sided_exchange_stable(gamma_u, res.assignment)
+    # one-to-one
+    assert len(set(res.assignment.tolist())) == k
+
+
+@given(k=st.integers(2, 7), seed=st.integers(0, 10_000))
+def test_swaps_strictly_reduce_sum_utility(k, seed):
+    """Every executed swap strictly reduces total utility => convergence
+    (the paper's convergence argument)."""
+    rng = np.random.default_rng(seed)
+    gamma, feas = _random_instance(rng, k, k)
+    gamma_u = prepare_utility(gamma, feas)
+    init = rng.permutation(k)
+    res = swap_matching(gamma, feas, rng, initial=init)
+    u_init = gamma_u[init, np.arange(k)].sum()
+    u_fin = res.utilities.sum()
+    assert u_fin <= u_init + 1e-9
+
+
+def test_matching_beats_random_on_average(rng):
+    """M-SA vs R-SA: stable matching should not be worse in expectation
+    (mechanism behind Fig. 4)."""
+    wins = 0
+    for s in range(30):
+        r = np.random.default_rng(s)
+        gamma, feas = _random_instance(r, 4, 4)
+        m = swap_matching(gamma, feas, r)
+        ra = random_assignment(gamma, feas, r)
+        if m.utilities.sum() <= ra.utilities.sum() + 1e-9:
+            wins += 1
+    assert wins >= 24  # stable matching at least ties in >= 80% of cases
+
+
+def test_infeasible_devices_marked():
+    gamma = np.array([[1.0, 2.0], [3.0, 4.0]])
+    feas = np.array([[False, True], [False, True]])  # device 0 fully infeasible
+    res = swap_matching(gamma, feas, np.random.default_rng(0))
+    i0 = list(res.assignment).index(res.assignment[0])
+    assert not res.feasible[0]
+    assert res.utilities[0] == U_MAX
+
+
+def test_known_optimal_2x2():
+    """2x2 with dominant diagonal: swap matching must find the min-sum
+    assignment (2ES = optimal for 2 players)."""
+    gamma = np.array([[1.0, 10.0], [10.0, 1.0]])
+    feas = np.ones((2, 2), bool)
+    res = swap_matching(gamma, feas, np.random.default_rng(0), initial=np.array([1, 0]))
+    assert res.utilities.sum() == 2.0

@@ -1,0 +1,88 @@
+"""Algorithm 1 (polyblock outer approximation) vs the brute-force oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import WirelessConfig, fixed_ra, grid_oracle, is_infeasible, solve_pairs
+from repro.core.wireless import total_energy, total_time
+
+CFG = WirelessConfig()
+
+
+@given(
+    h2=st.floats(0.05, 500.0),
+    beta=st.integers(5, 80),
+)
+@settings(max_examples=30)
+def test_polyblock_matches_oracle(h2, beta):
+    res = solve_pairs(np.array([beta], float), np.array([h2]), CFG)
+    oracle = grid_oracle(float(beta), h2, CFG)
+    if not res.feasible[0]:
+        assert oracle == np.inf
+        return
+    # Optimal time within 2% of (or better than) the grid oracle.
+    assert res.time_s[0] <= oracle * 1.02 + 1e-6
+
+
+@given(h2=st.floats(1e-4, 1e3), beta=st.integers(1, 200))
+def test_energy_budget_respected(h2, beta):
+    res = solve_pairs(np.array([beta], float), np.array([h2]), CFG)
+    if res.feasible[0]:
+        e = total_energy(res.tau[0], res.p[0], beta, h2, CFG)
+        assert e <= CFG.e_max_j * (1 + 1e-6)
+        assert 0 < res.tau[0] <= 1 and 0 < res.p[0] <= 1
+
+
+def test_solution_on_boundary_when_constrained(rng):
+    """When (1,1) violates the budget, the optimum sits on g=0 (monotonic
+    optimization: f increasing => boundary optimal)."""
+    h2 = 5.0
+    beta = 40.0
+    if total_energy(1.0, 1.0, beta, h2, CFG) <= CFG.e_max_j:
+        pytest.skip("budget not active at this point")
+    res = solve_pairs(np.array([beta]), np.array([h2]), CFG)
+    e = total_energy(res.tau[0], res.p[0], beta, h2, CFG)
+    assert e >= 0.95 * CFG.e_max_j  # active constraint
+
+
+def test_unconstrained_corner():
+    """Tiny payloads: (tau, p) = (1, 1) feasible => that's the optimum."""
+    cfg = WirelessConfig(e_max_j=100.0)
+    res = solve_pairs(np.array([10.0]), np.array([10.0]), cfg)
+    assert res.feasible[0]
+    assert res.tau[0] == pytest.approx(1.0)
+    assert res.p[0] == pytest.approx(1.0)
+
+
+def test_vectorized_grid_consistent(rng):
+    """The batched solver must match per-pair solves."""
+    h2 = rng.exponential(size=(4, 6)) * 2.0
+    beta = rng.integers(5, 60, 6).astype(float)
+    batch = solve_pairs(beta[None, :], h2, CFG)
+    for k in range(4):
+        for n in range(6):
+            one = solve_pairs(np.array([beta[n]]), np.array([h2[k, n]]), CFG)
+            if batch.feasible[k, n]:
+                assert batch.time_s[k, n] == pytest.approx(one.time_s[0], rel=1e-6)
+
+
+def test_fixed_ra_feasibility_semantics(rng):
+    h2 = rng.exponential(size=(3, 5))
+    beta = rng.integers(5, 60, 5).astype(float)
+    res = fixed_ra(beta[None, :], h2, CFG)
+    e = total_energy(0.5, 0.5, beta[None, :], h2, CFG)
+    np.testing.assert_array_equal(res.feasible, e <= CFG.e_max_j)
+    assert np.all(np.isinf(res.time_s[~res.feasible]))
+
+
+def test_mo_ra_never_worse_than_fix_ra(rng):
+    """MO-RA optimizes what FIX-RA fixes; wherever both are feasible the
+    optimized latency must be <= the fixed one (Fig. 8/9 mechanism)."""
+    h2 = rng.exponential(size=(4, 20)) * 3
+    beta = rng.integers(5, 60, 20).astype(float)
+    mo = solve_pairs(beta[None, :], h2, CFG)
+    fx = fixed_ra(beta[None, :], h2, CFG)
+    both = mo.feasible & fx.feasible
+    assert np.all(mo.time_s[both] <= fx.time_s[both] * 1.001)
+    # Prop-1 infeasible pairs are infeasible under ANY allocation.
+    assert not np.any(~mo.feasible & fx.feasible)

@@ -1,0 +1,58 @@
+"""End-to-end behaviour of the paper's system: the Stackelberg control plane
+driving real FL training — the trends the paper's figures claim."""
+import numpy as np
+import pytest
+
+from repro.core import RoundPolicy, WirelessConfig
+from repro.fl import SimConfig, run_simulation
+
+
+def test_proposed_scheme_beats_fixed_ds():
+    """Fig. 3's clearest ordering: Fixed-DS (least data) loses to Alg. 3."""
+    kw = dict(dataset="mnist", rounds=40, n_samples=400, eval_every=10,
+              local_steps=3, seed=1)
+    prop = run_simulation(SimConfig(policy=RoundPolicy(ds="alg3"), **kw))
+    fixd = run_simulation(SimConfig(policy=RoundPolicy(ds="fixed"), **kw))
+    assert prop.global_loss[-1] < fixd.global_loss[-1]
+
+
+def test_proposed_uses_all_subchannels():
+    """Fig. 7: Alg. 3 keeps all K sub-channels busy (on average more than
+    random selection, which loses devices to Prop-1 infeasibility)."""
+    kw = dict(dataset="mnist", rounds=25, n_samples=300, eval_every=1, seed=0)
+    prop = run_simulation(SimConfig(policy=RoundPolicy(ds="alg3"), **kw))
+    rand = run_simulation(SimConfig(policy=RoundPolicy(ds="random"), **kw))
+    assert prop.n_transmitted.mean() >= rand.n_transmitted.mean()
+    assert prop.n_transmitted.mean() >= 3.0  # K = 4
+
+
+def test_mo_ra_participation_beats_fix_ra():
+    """Figs. 8-9: MO-RA keeps more devices feasible than FIX-RA."""
+    kw = dict(dataset="mnist", rounds=25, n_samples=300, eval_every=1, seed=0,
+              pt_dbm=8.0)
+    mo = run_simulation(SimConfig(policy=RoundPolicy(ds="random", ra="mo"), **kw))
+    fx = run_simulation(SimConfig(policy=RoundPolicy(ds="random", ra="fix"), **kw))
+    assert mo.n_transmitted.mean() >= fx.n_transmitted.mean()
+
+
+def test_radius_degrades_participation():
+    """Fig. 6 mechanism: larger radius -> worse channels -> Prop-1 locks out
+    more devices."""
+    near = run_simulation(SimConfig(dataset="mnist", rounds=20, n_samples=200,
+                                    radius_m=200.0, eval_every=1, seed=3,
+                                    policy=RoundPolicy(ds="random")))
+    far = run_simulation(SimConfig(dataset="mnist", rounds=20, n_samples=200,
+                                   radius_m=1500.0, eval_every=1, seed=3,
+                                   policy=RoundPolicy(ds="random")))
+    assert near.n_transmitted.mean() > far.n_transmitted.mean()
+
+
+def test_energy_budget_increases_participation():
+    """Fig. 8: bigger E^max -> more feasible devices."""
+    lo = run_simulation(SimConfig(dataset="mnist", rounds=20, n_samples=200,
+                                  e_max_j=0.005, eval_every=1, seed=2,
+                                  policy=RoundPolicy(ds="random")))
+    hi = run_simulation(SimConfig(dataset="mnist", rounds=20, n_samples=200,
+                                  e_max_j=0.1, eval_every=1, seed=2,
+                                  policy=RoundPolicy(ds="random")))
+    assert hi.n_transmitted.mean() >= lo.n_transmitted.mean()

@@ -1,0 +1,76 @@
+"""System model (eqs. 1-10) + Propositions 1-2."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    WirelessConfig,
+    comm_energy,
+    comm_rate,
+    comm_time,
+    compute_energy,
+    compute_time,
+    is_infeasible,
+    min_comm_energy,
+    sample_channel_gains,
+    sample_topology,
+    total_energy,
+    total_time,
+)
+
+CFG = WirelessConfig()
+
+
+def test_topology_within_radius(rng):
+    topo = sample_topology(rng, CFG)
+    assert topo.n_devices == CFG.n_devices
+    assert np.all(topo.distances_m <= CFG.radius_m)
+    assert np.all(topo.distances_m >= 1.0)
+
+
+def test_channel_shape_and_positivity(rng):
+    topo = sample_topology(rng, CFG)
+    h2 = sample_channel_gains(rng, CFG, topo)
+    assert h2.shape == (CFG.n_subchannels, CFG.n_devices)
+    assert np.all(h2 > 0)
+
+
+def test_units_sanity():
+    # Table-I magnitudes: 25 samples at tau=1 -> 0.25 s compute, 0.025 J.
+    assert compute_time(1.0, 25, CFG) == pytest.approx(0.25)
+    assert compute_energy(1.0, 25, CFG) == pytest.approx(0.025)
+    # 1 Mbit over a unit-SNR channel at full power ~ 1 s.
+    assert comm_time(1.0, 1.0, CFG) == pytest.approx(1.0)
+
+
+@given(
+    tau1=st.floats(0.05, 1.0), tau2=st.floats(0.05, 1.0),
+    p1=st.floats(0.01, 1.0), p2=st.floats(0.01, 1.0),
+    h2=st.floats(1e-3, 1e3), beta=st.integers(1, 200),
+)
+def test_prop2_monotonicity(tau1, tau2, p1, p2, h2, beta):
+    """Proposition 2: T decreasing, E increasing in (tau, p)."""
+    lo_t, hi_t = sorted((tau1, tau2))
+    lo_p, hi_p = sorted((p1, p2))
+    assert total_time(hi_t, hi_p, beta, h2, CFG) <= total_time(lo_t, lo_p, beta, h2, CFG) + 1e-12
+    assert total_energy(hi_t, hi_p, beta, h2, CFG) >= total_energy(lo_t, lo_p, beta, h2, CFG) - 1e-12
+
+
+@given(h2=st.floats(1e-6, 1e4), p=st.floats(1e-6, 1.0))
+def test_prop1_min_energy_is_infimum(h2, p):
+    """E^cm(p) > inf_p E^cm for every p>0 (eq. 15 really is the infimum)."""
+    assert comm_energy(p, h2, CFG) >= min_comm_energy(h2, CFG) * (1 - 1e-9)
+
+
+@given(h2=st.floats(1e-6, 1e4))
+def test_prop1_threshold(h2):
+    """Exactly eq. (15)."""
+    lhs = np.log(2) * CFG.pt_w * CFG.model_bits
+    rhs = CFG.e_max_j * CFG.bandwidth_hz * h2
+    assert bool(is_infeasible(h2, CFG)) == (lhs >= rhs)
+
+
+def test_rate_increases_with_power():
+    h2 = 3.0
+    r = comm_rate(np.linspace(0.01, 1, 50), h2, CFG)
+    assert np.all(np.diff(r) > 0)
