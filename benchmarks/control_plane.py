@@ -1,0 +1,110 @@
+"""Control-plane benchmark: per-round NumPy Algorithm 1 vs the batched
+jitted whole-horizon solver (core.monotonic_jax).
+
+Emits a CSV table like the other benchmark modules and, when given
+`json_path` (benchmarks/run.py --json), writes BENCH_control_plane.json so
+the perf trajectory is machine-readable across PRs.  The acceptance row is
+`horizon/N512` — the whole-horizon (100 x 4 x 512) solve must be >= 10x
+faster than the per-round NumPy loop, agreeing within 1e-6 relative on
+feasible time_s.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import numpy as np
+
+from repro.core import (
+    WirelessConfig,
+    sample_channel_gains,
+    sample_topology,
+    solve_pairs,
+    solve_pairs_jit,
+)
+
+from .common import emit
+
+K = 4
+HORIZON_ROUNDS = 100
+HORIZON_N = 512
+
+
+def _setup(n, rounds, seed=0):
+    cfg = WirelessConfig(n_devices=n, n_subchannels=K)
+    rng = np.random.default_rng(seed)
+    topo = sample_topology(rng, cfg)
+    h2 = np.stack([sample_channel_gains(rng, cfg, topo) for _ in range(rounds)])
+    beta = rng.integers(5, 60, n).astype(float)
+    return cfg, beta, h2
+
+
+def _agreement(ref_time, jit, mask):
+    return float(np.max(np.abs(ref_time[mask] - jit.time_s[mask])
+                        / np.abs(ref_time[mask])))
+
+
+def run(json_path: str | None = None):
+    rows = []
+    record = {
+        "bench": "control_plane",
+        "host": platform.machine(),
+        "settings": {"K": K, "rounds": HORIZON_ROUNDS, "N": HORIZON_N},
+        "solve_pairs_micro": {},
+    }
+
+    # ---- micro: one-round solve at growing N (NumPy vs jitted) ------------
+    for n in (32, 512, 4096):
+        cfg, beta, h2 = _setup(n, 1)
+        t0 = time.time()
+        ref = solve_pairs(beta[None, :], h2[0], cfg)
+        t_np = time.time() - t0
+        solve_pairs_jit(beta[None, :], h2[0], cfg)      # warm the jit caches
+        t0 = time.time()
+        jit = solve_pairs_jit(beta[None, :], h2[0], cfg)
+        t_jit = time.time() - t0
+        agree = _agreement(ref.time_s, jit, ref.feasible)
+        rows.append([f"solve_pairs/np/N{n}", round(t_np * 1e6, 1), f"{K}x{n} pairs"])
+        rows.append([f"solve_pairs/jit/N{n}", round(t_jit * 1e6, 1),
+                     f"{t_np / t_jit:.1f}x, agree={agree:.1e}"])
+        record["solve_pairs_micro"][f"N{n}"] = {
+            "numpy_us": t_np * 1e6, "jit_us": t_jit * 1e6,
+            "speedup": t_np / t_jit, "max_rel_diff": agree,
+        }
+
+    # ---- acceptance: whole-horizon Gamma precompute (always full scale) ---
+    rounds = HORIZON_ROUNDS
+    cfg, beta, h2_all = _setup(HORIZON_N, rounds)
+    solve_pairs_jit(beta[None, None, :], h2_all, cfg)        # warm/compile
+    t0 = time.time()
+    jit = solve_pairs_jit(beta[None, None, :], h2_all, cfg)
+    t_jit = time.time() - t0
+    t0 = time.time()
+    ref_time = np.stack(
+        [solve_pairs(beta[None, :], h2_all[t], cfg).time_s
+         for t in range(rounds)])
+    t_np = time.time() - t0
+    agree = _agreement(ref_time, jit, jit.feasible)
+    speedup = t_np / t_jit
+    rows.append([f"horizon/np_loop/N{HORIZON_N}", round(t_np * 1e6, 1),
+                 f"{rounds} rounds"])
+    rows.append([f"horizon/jit/N{HORIZON_N}", round(t_jit * 1e6, 1),
+                 f"{speedup:.1f}x, agree={agree:.1e}"])
+    record["horizon"] = {
+        "rounds": rounds, "N": HORIZON_N, "K": K,
+        "numpy_loop_s": t_np, "jit_s": t_jit,
+        "speedup": speedup, "max_rel_diff": agree,
+        "target_speedup": 10.0, "meets_target": bool(speedup >= 10.0),
+    }
+
+    emit("control_plane", ["us_per_call", "derived"], rows)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(record, fh, indent=2)
+        print(f"# wrote {json_path}")
+    return record
+
+
+if __name__ == "__main__":
+    run("BENCH_control_plane.json")

@@ -5,11 +5,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import WirelessConfig
 from repro.kernels.fedavg_agg.ops import fedavg_aggregate
 from repro.kernels.fedavg_agg.ref import fedavg_agg_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.polyblock_project.ops import polyblock_project
 from repro.kernels.rwkv6_wkv.ops import wkv6_pallas
 from repro.kernels.rwkv6_wkv.ref import wkv6_scan_ref
 
@@ -57,6 +60,35 @@ def run():
     _, us = timed(lambda: jax.block_until_ready(
         fedavg_aggregate(x, wts, interpret=True)))
     rows.append(["fedavg_agg/pallas_interp", round(us, 1), "interpret-mode"])
+
+    # polyblock projection (K=4, N sweep): NumPy 60-step bisection vs jitted
+    # (jnp mirror + warm-started Newton) vs Pallas interpret
+    wcfg = WirelessConfig()
+    rng = np.random.default_rng(0)
+    for n in (32, 512, 4096):
+        sz = 4 * n
+        v = np.stack([rng.uniform(0.05, 1, sz), rng.uniform(0.05, 1, sz)], -1)
+        beta = rng.integers(5, 60, sz).astype(float)
+        h2 = rng.exponential(size=sz) * 3
+        em = np.full(sz, wcfg.e_max_j)
+        _, us = timed(lambda: polyblock_project(v, beta, h2, em, wcfg,
+                                                backend="ref"))
+        rows.append([f"polyblock_project/ref_np/K4xN{n}", round(us, 1),
+                     f"{60 * sz} g-evals"])
+        from jax.experimental import enable_x64
+        with enable_x64():  # the solver's production precision
+            for be in ("bisect", "newton"):
+                fn = jax.jit(lambda v, b, h, e, be=be: polyblock_project(
+                    v, b, h, e, wcfg, backend=be))
+                args = [jnp.asarray(x) for x in (v, beta, h2, em)]
+                _, us = timed(lambda: jax.block_until_ready(fn(*args)))
+                rows.append([f"polyblock_project/{be}_jit/K4xN{n}",
+                             round(us, 1), f"{sz} pairs, f64"])
+        _, us = timed(lambda: jax.block_until_ready(
+            polyblock_project(v, beta, h2, em, wcfg, backend="pallas",
+                              interpret=True)))
+        rows.append([f"polyblock_project/pallas_interp/K4xN{n}", round(us, 1),
+                     "interpret-mode"])
 
     emit("kernels_micro", ["us_per_call", "derived"], rows)
     return rows

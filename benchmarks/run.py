@@ -1,9 +1,12 @@
 """Benchmark entrypoint: one table per paper figure + Prop-3 + kernels +
-roofline. Prints name,...,derived CSV blocks (``#table,<name>`` headers).
+control plane + roofline. Prints name,...,derived CSV blocks
+(``#table,<name>`` headers).
 
   PYTHONPATH=src python -m benchmarks.run            # reduced scale
   PYTHONPATH=src python -m benchmarks.run --full     # paper scale
   PYTHONPATH=src python -m benchmarks.run --only fig3_global_loss
+  PYTHONPATH=src python -m benchmarks.run --json     # + machine-readable
+                                                     #   BENCH_control_plane.json
 """
 from __future__ import annotations
 
@@ -11,6 +14,7 @@ import sys
 import time
 
 from . import (
+    control_plane,
     fig3_global_loss,
     fig4_ablation,
     fig5_num_devices,
@@ -23,6 +27,8 @@ from . import (
     roofline,
 )
 
+CONTROL_PLANE_JSON = "BENCH_control_plane.json"
+
 ALL = {
     "fig3_global_loss": fig3_global_loss.run,
     "fig4_ablation": fig4_ablation.run,
@@ -33,6 +39,7 @@ ALL = {
     "fig9_power": fig9_power.run,
     "prop3_bound": prop3_bound.run,
     "kernels_micro": kernels_micro.run,
+    "control_plane": control_plane.run,
     "roofline": roofline.run,
 }
 
@@ -41,8 +48,12 @@ def main() -> None:
     only = None
     if "--only" in sys.argv:
         only = sys.argv[sys.argv.index("--only") + 1]
+    runners = dict(ALL)
+    if "--json" in sys.argv:  # bind options at registration, not dispatch
+        runners["control_plane"] = lambda: control_plane.run(
+            json_path=CONTROL_PLANE_JSON)
     t0 = time.time()
-    for name, fn in ALL.items():
+    for name, fn in runners.items():
         if only and name != only:
             continue
         t = time.time()

@@ -1,14 +1,15 @@
 """Paper core: Stackelberg-game convergence acceleration for wireless FL.
 
 Control-plane algorithms (all vectorized, run server-side between rounds):
-  wireless    -- system model, eqs. 1-10
-  feasibility -- Proposition 1
-  monotonic   -- Algorithm 1 (polyblock outer approximation, MO-RA)
-  matching    -- Algorithm 2 (swap matching, M-SA)
-  aou         -- Age-of-Update state, eqs. 6-7
-  selection   -- Algorithm 3 (+ benchmark schemes)
-  stackelberg -- per-round game orchestration
-  convergence -- Proposition 3 bound
+  wireless      -- system model, eqs. 1-10 (np/jnp backend-agnostic)
+  feasibility   -- Proposition 1 (np/jnp backend-agnostic)
+  monotonic     -- Algorithm 1 (polyblock outer approximation, MO-RA)
+  monotonic_jax -- Algorithm 1, jitted/batched whole-horizon port
+  matching      -- Algorithm 2 (swap matching, M-SA)
+  aou           -- Age-of-Update state, eqs. 6-7
+  selection     -- Algorithm 3 (+ benchmark schemes)
+  stackelberg   -- per-round game orchestration
+  convergence   -- Proposition 3 bound
 """
 from .aou import AoUState, aou_weights, init_aou, step_aou
 from .convergence import convergence_bound, participation_deficit
@@ -19,8 +20,10 @@ from .matching import (
     is_two_sided_exchange_stable,
     random_assignment,
     swap_matching,
+    swap_matching_loop,
 )
 from .monotonic import RAResult, fixed_ra, grid_oracle, solve_pairs
+from .monotonic_jax import precompute_gamma, solve_pairs_jit
 from .selection import (
     SelectionOutcome,
     priority_list,

@@ -9,12 +9,15 @@ This is exactly the p -> 0+ limit of the communication-energy term: as the
 power fraction vanishes, E^cm -> ln(2) P_t D / (B |h|^2), the *infimum* of
 communication energy; if even that exceeds the budget, no (tau, p) in (0,1]^2
 is feasible.
+
+Backend-agnostic like `core.wireless` (DESIGN.md §6): numpy in, numpy out;
+JAX arrays (or tracers) in, jax.numpy out.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .wireless import WirelessConfig
+from .wireless import WirelessConfig, _asfloat, _xp
 
 __all__ = ["min_comm_energy", "is_infeasible", "feasible_mask"]
 
@@ -25,14 +28,15 @@ def min_comm_energy(h2, cfg: WirelessConfig):
     E^cm is increasing in p (Proposition 2), so the infimum is the p->0 limit:
     ln(2) P_t D / (B |h|^2).
     """
-    h2 = np.asarray(h2, dtype=np.float64)
-    return np.log(2.0) * cfg.pt_w * cfg.model_bits / (cfg.bandwidth_hz * np.maximum(h2, 1e-300))
+    xp = _xp(h2)
+    h2 = _asfloat(xp, h2)
+    return np.log(2.0) * cfg.pt_w * cfg.model_bits / (cfg.bandwidth_hz * xp.maximum(h2, 1e-300))
 
 
 def is_infeasible(h2, cfg: WirelessConfig, e_max=None):
     """Eq. (15) per element; True where the pair can never meet the budget."""
     e_max = cfg.e_max_j if e_max is None else e_max
-    return min_comm_energy(h2, cfg) >= np.asarray(e_max, np.float64)
+    return min_comm_energy(h2, cfg) >= _asfloat(_xp(h2, e_max), e_max)
 
 
 def feasible_mask(h2, cfg: WirelessConfig, e_max=None):

@@ -22,12 +22,19 @@ Deviations from the paper (documented in DESIGN.md §5):
   * the whole algorithm is vectorized across all (K x N) pairs at once --
     each pair keeps its own vertex set in a preallocated array and pairs
     retire independently when their eq. (26) tolerance is met.
+
+This module is the host-side (NumPy) reference implementation.  The
+device-resident port — jitted `lax.while_loop` solver, Pallas-fused
+projection, whole-horizon batching — lives in `core.monotonic_jax` and
+`kernels.polyblock_project` (DESIGN.md §6) and is held to 1e-6 relative
+agreement with this module by tests/test_monotonic_jax.py.
 """
 from __future__ import annotations
 
 import dataclasses
 import numpy as np
 
+from ..kernels.polyblock_project.ref import project_ref
 from .feasibility import is_infeasible
 from .wireless import WirelessConfig, total_energy, total_time
 
@@ -65,21 +72,11 @@ def _project(v, beta, h2, e_max, cfg: WirelessConfig, n_bisect: int = 60):
     in zeta, g -> (Prop-1 threshold - E^max) < 0 as zeta -> 0 for feasible
     pairs, so a root exists whenever g(v) > 0; otherwise zeta = 1 (the vertex
     itself is feasible -- paper's theta=1 corner case).
-    """
-    tau_v, p_v = v[..., 0], v[..., 1]
-    g_at_v = g_con(tau_v, p_v, beta, h2, cfg, e_max)
-    need_root = g_at_v > 0.0
 
-    lo = np.full_like(tau_v, _TINY)
-    hi = np.ones_like(tau_v)
-    for _ in range(n_bisect):
-        mid = 0.5 * (lo + hi)
-        g_mid = g_con(mid * tau_v, mid * p_v, beta, h2, cfg, e_max)
-        take_hi = g_mid > 0.0
-        hi = np.where(take_hi, mid, hi)
-        lo = np.where(take_hi, lo, mid)
-    zeta = np.where(need_root, lo, 1.0)  # lo side keeps g <= 0 (feasible)
-    return zeta[..., None] * v
+    Canonical implementation shared with the device backends:
+    `kernels.polyblock_project` (ref.py / ops.py / kernel.py).
+    """
+    return project_ref(v, beta, h2, e_max, cfg, n_bisect=n_bisect)
 
 
 def solve_pairs(

@@ -1,0 +1,349 @@
+"""Device-resident Algorithm 1: jitted, batched polyblock outer approximation.
+
+Port of `core.monotonic.solve_pairs` to JAX (DESIGN.md §6).  The host
+implementation re-enters Python for every polyblock iteration of every
+planning round; this one solves an arbitrary batch — including the
+whole-horizon (rounds x K x N) Γ tensor, which `stackelberg.plan_round`
+notes is selection-independent — as a sequence of jitted steps over
+fixed-shape device arrays:
+
+  verts/vproj : (rows, m, 2)  vertex set + boundary projections per pair
+  vfval       : (rows, m)     f of eq. (21) at each projection
+  valid/active: bool masks replacing the host path's ragged retirement
+
+Structural optimizations over a naive port (all result-preserving — the
+iteration trajectory replays the host algorithm's structure exactly, so
+`iterations` matches the reference pair-for-pair):
+
+  * feasibility pre-filter — Proposition-1 infeasible pairs (the majority at
+    realistic radii) never enter the vertex store at all;
+  * phase-split steps with active-set compaction — pairs retire after very
+    few iterations (the empirical distribution is p50 ~ 2, max ~ 24 at
+    Table-I settings), so the driver runs the cheap selection half-step,
+    syncs the active mask, compacts surviving pairs into a smaller bucket,
+    and only then pays for the expensive child projections.  Bucket sizes
+    come from the {1, 1.25, 1.5, 1.75} x 2^k ladder so padding slack stays
+    under 25% while jit caches stay warm across calls;
+  * lazy vertex store — the store starts at 8 columns and doubles toward
+    max_iter + 3 only for the rare stragglers, by which point compaction
+    has shrunk the row count, so eq. (24)'s per-pair vertex replacement is
+    a fully vectorized masked select over a narrow store (XLA CPU would
+    execute a row scatter as a serial loop).
+
+The projection (eqs. 27-29) dispatches through `kernels.polyblock_project`:
+warm-started safeguarded log-space Newton ("newton", default — same root as
+the reference 60-step bisection to ~1e-9 relative with 4x fewer
+transcendental evaluations), exact mirrored bisection ("bisect"), or the
+Pallas kernel ("pallas", default on TPU).  Everything runs float64 under a
+scoped `jax.experimental.enable_x64`, so results match the NumPy path to
+~1e-7 relative (1e-6 contract, tests/test_monotonic_jax.py) without
+enabling x64 globally for the learning plane.
+
+At the acceptance scale (100 rounds x K=4 x N=512 on a 2-core CPU
+container) the whole-horizon solve is ~11x faster than the per-round host
+loop; benchmarks/control_plane.py records the trajectory in
+BENCH_control_plane.json.
+"""
+from __future__ import annotations
+
+import warnings
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+# The masked-select store rewrite intentionally produces fresh buffers for
+# the four (rows, m, ...) store arrays, so XLA cannot reuse their donated
+# inputs and warns once per compiled bucket shape. Expected; silence it so
+# every simulation run doesn't print compiler noise.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+from ..kernels.polyblock_project.ops import polyblock_project
+from .feasibility import is_infeasible
+from .monotonic import RAResult
+from .wireless import WirelessConfig, total_energy, total_time
+
+__all__ = ["solve_pairs_jit", "precompute_gamma"]
+
+# State tuple layout for one bucket of pairs (rows = bucket size, m = the
+# current lazy vertex-slot capacity).
+_BETA, _H2, _EMAX, _VERTS, _VPROJ, _VFVAL, _VALID, _ACTIVE = range(8)
+_PREV, _BESTF, _BESTP, _ITERS, _NVALID, _IDX = range(8, 14)
+
+
+def _bucket(n: int, lo: int = 128) -> int:
+    """Smallest size in the {1, 1.25, 1.5, 1.75} x 2^k ladder that fits n:
+    bounded padding slack (<= 25%), bounded number of distinct shapes for
+    the jit cache."""
+    b = lo
+    while True:
+        for quarters in (4, 5, 6, 7):
+            s = (b * quarters) >> 2
+            if n <= s:
+                return s
+        b <<= 1
+
+
+def _project(v, beta, h2, e_max, cfg, backend, n_bisect):
+    return polyblock_project(v, beta, h2, e_max, cfg,
+                             n_bisect=n_bisect, backend=backend)
+
+
+@partial(jax.jit, static_argnames=("cfg", "m", "backend", "n_bisect"))
+def _init_state(beta, h2, e_max, n_real, *, cfg, m, backend, n_bisect):
+    b = beta.shape[0]
+    active = jnp.arange(b) < n_real
+    v0 = jnp.ones((b, 2), h2.dtype)
+    pj0 = _project(v0, beta, h2, e_max, cfg, backend, n_bisect)
+    f0 = -total_time(pj0[:, 0], pj0[:, 1], beta, h2, cfg)
+    verts = jnp.zeros((b, m, 2), h2.dtype).at[:, 0].set(v0)
+    vproj = jnp.zeros((b, m, 2), h2.dtype).at[:, 0].set(pj0)
+    vfval = jnp.full((b, m), -jnp.inf, h2.dtype).at[:, 0].set(f0)
+    valid = jnp.zeros((b, m), bool).at[:, 0].set(True)
+    return (beta, h2, e_max, verts, vproj, vfval, valid, active,
+            jnp.full(b, jnp.inf, h2.dtype), f0, pj0,
+            jnp.zeros(b, jnp.int32), jnp.ones(b, jnp.int32),
+            jnp.zeros(b, jnp.int32))
+
+
+def _select_impl(state, eps):
+    """Polyblock selection half-step (paper steps 9-10): pick each pair's
+    best vertex, update the incumbent, retire pairs that meet eq. (26).
+    Split from the projection half so the driver can compact the active set
+    *before* paying for child projections."""
+    (beta, h2, e_max, verts, vproj, vfval, valid, active,
+     prev_best, best_f, best_proj, iters, nvalid, _) = state
+
+    fv = jnp.where(valid, vfval, -jnp.inf)
+    idx = jnp.argmax(fv, axis=1).astype(jnp.int32)      # paper step 9
+    fbest = jnp.take_along_axis(fv, idx[:, None].astype(jnp.int64), 1)[:, 0]
+
+    improved = fbest > best_f
+    sel_proj = jnp.take_along_axis(
+        vproj, idx[:, None, None].astype(jnp.int64), 1)[:, 0]
+    best_f = jnp.where(improved, fbest, best_f)
+    best_proj = jnp.where(improved[:, None], sel_proj, best_proj)
+
+    done = jnp.abs(fbest - prev_best) <= eps            # eq. (26)
+    prev_best = fbest
+    active = active & ~done
+    iters = iters + active.astype(jnp.int32)
+
+    return (beta, h2, e_max, verts, vproj, vfval, valid, active,
+            prev_best, best_f, best_proj, iters, nvalid, idx)
+
+
+def _children_impl(state, cfg, backend, n_bisect):
+    """Polyblock refinement half-step (paper steps 11-13): split the chosen
+    vertex into its two children (eq. 23), project both in one batch, and
+    write them into the store (eq. 24)."""
+    (beta, h2, e_max, verts, vproj, vfval, valid, active,
+     prev_best, best_f, best_proj, iters, nvalid, idx) = state
+    b, m = vfval.shape
+
+    v = jnp.take_along_axis(verts, idx[:, None, None].astype(jnp.int64), 1)[:, 0]
+    phi = jnp.take_along_axis(vproj, idx[:, None, None].astype(jnp.int64), 1)[:, 0]
+    # Children (eq. 23): v - (v_i - phi_i) e_i, both projected in one batch.
+    child1 = jnp.stack([phi[:, 0], v[:, 1]], axis=-1)
+    child2 = jnp.stack([v[:, 0], phi[:, 1]], axis=-1)
+    ch = jnp.concatenate([child1, child2], axis=0)
+    beta2 = jnp.concatenate([beta, beta])
+    h2x2 = jnp.concatenate([h2, h2])
+    pj = _project(ch, beta2, h2x2, jnp.concatenate([e_max, e_max]),
+                  cfg, backend, n_bisect)
+    fj = -total_time(pj[:, 0], pj[:, 1], beta2, h2x2, cfg)
+    pj1, pj2 = pj[:b], pj[b:]
+    f1, f2 = fj[:b], fj[b:]
+
+    # Eq. (24): child1 replaces the split vertex, child2 takes the next free
+    # slot, retired rows keep their store.  Written as two masked one-hot
+    # selects rather than a row scatter: XLA CPU executes scatters as a
+    # serial per-row loop, while the selects fuse into one vectorized pass
+    # over the store — and the store is narrow (lazy m), so the pass is
+    # cheap.  The two masks are disjoint (slot idx is already valid;
+    # slot nvalid is the first free one).
+    cols = jnp.arange(m)
+    mask1 = (cols[None, :] == idx[:, None]) & active[:, None]
+    mask2 = (cols[None, :] == nvalid[:, None]) & active[:, None]
+    verts = jnp.where(mask1[..., None], child1[:, None, :],
+                      jnp.where(mask2[..., None], child2[:, None, :], verts))
+    vproj = jnp.where(mask1[..., None], pj1[:, None, :],
+                      jnp.where(mask2[..., None], pj2[:, None, :], vproj))
+    vfval = jnp.where(mask1, f1[:, None],
+                      jnp.where(mask2, f2[:, None], vfval))
+    valid = valid | mask2
+    nvalid = nvalid + active.astype(jnp.int32)
+
+    return (beta, h2, e_max, verts, vproj, vfval, valid, active,
+            prev_best, best_f, best_proj, iters, nvalid, idx)
+
+
+@partial(jax.jit, static_argnames=("eps",), donate_argnums=(0,))
+def _step_select(state, *, eps):
+    return _select_impl(state, eps)
+
+
+@partial(jax.jit, static_argnames=("cfg", "backend", "n_bisect"),
+         donate_argnums=(0,))
+def _step_children(state, *, cfg, backend, n_bisect):
+    return _children_impl(state, cfg, backend, n_bisect)
+
+
+@jax.jit
+def _gather(state, idx, n_real):
+    """Compact a bucket: keep rows `idx` (padded), mark padding inactive."""
+    out = tuple(a[idx] for a in state)
+    active = out[_ACTIVE] & (jnp.arange(idx.shape[0]) < n_real)
+    return out[:_ACTIVE] + (active,) + out[_ACTIVE + 1:]
+
+
+@partial(jax.jit, static_argnames=("new_m",), donate_argnums=(0,))
+def _grow(state, *, new_m):
+    """Append vertex-store columns (lazy capacity: the store starts at 8
+    columns because pairs empirically retire after a handful of iterations,
+    and grows toward max_iter + 3 only for the rare stragglers — by which
+    point compaction has shrunk the row count, so the wide store is never
+    paid for at full batch).  New columns carry valid=False / fval=-inf, so
+    they are inert until a child is written into them."""
+    (beta, h2, e_max, verts, vproj, vfval, valid, active,
+     prev_best, best_f, best_proj, iters, nvalid, idx) = state
+    b, m = vfval.shape
+    pad = new_m - m
+    verts = jnp.concatenate([verts, jnp.zeros((b, pad, 2), verts.dtype)], 1)
+    vproj = jnp.concatenate([vproj, jnp.zeros((b, pad, 2), vproj.dtype)], 1)
+    vfval = jnp.concatenate([vfval, jnp.full((b, pad), -jnp.inf, vfval.dtype)], 1)
+    valid = jnp.concatenate([valid, jnp.zeros((b, pad), bool)], 1)
+    return (beta, h2, e_max, verts, vproj, vfval, valid, active,
+            prev_best, best_f, best_proj, iters, nvalid, idx)
+
+
+def solve_pairs_jit(
+    beta,
+    h2,
+    cfg: WirelessConfig,
+    e_max=None,
+    *,
+    eps: float | None = None,
+    max_iter: int = 64,
+    backend: str | None = None,
+    n_bisect: int = 60,
+) -> RAResult:
+    """Batched jitted Algorithm 1 over pairs of any shape.
+
+    Drop-in for `monotonic.solve_pairs` (same arguments and RAResult contract,
+    host numpy outputs); pass the whole-horizon (rounds x K x N) channel
+    tensor to amortize a single solve over the training horizon.  backend:
+    None (auto: "pallas" on TPU else "newton"), "newton", "bisect" (exact
+    mirror of the host bisection), "jnp" (alias of "bisect"), or "pallas".
+    n_bisect sets the bisection step count of the "bisect"/"pallas"
+    projections; the "newton" backend converges by a different rule and has
+    its own fixed step budget (`project_newton`'s n_steps).
+    """
+    h2 = np.asarray(h2, dtype=np.float64)
+    shape = h2.shape
+    e_max = cfg.e_max_j if e_max is None else e_max
+    eps = 0.01 if eps is None else float(eps)
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "newton"
+    if backend == "jnp":
+        backend = "bisect"
+
+    beta_f = np.broadcast_to(np.asarray(beta, np.float64), shape).reshape(-1)
+    h2f = h2.reshape(-1)
+    e_f = np.broadcast_to(np.asarray(e_max, np.float64), shape).reshape(-1)
+    n = h2f.shape[0]
+
+    feas = ~is_infeasible(h2f, cfg, e_f)
+    tau = np.full(n, np.nan)
+    p = np.full(n, np.nan)
+    time_s = np.full(n, np.inf)
+    energy = np.full(n, np.nan)
+    iters_out = np.zeros(n, dtype=np.int64)
+
+    def flush(rows_mask, row_orig, bp, bf, it):
+        rows = np.where(rows_mask & (row_orig >= 0))[0]
+        if rows.size == 0:
+            return
+        orig = row_orig[rows]
+        tau[orig] = bp[rows, 0]
+        p[orig] = bp[rows, 1]
+        time_s[orig] = -bf[rows]
+        energy[orig] = total_energy(bp[rows, 0], bp[rows, 1],
+                                    beta_f[orig], h2f[orig], cfg)
+        iters_out[orig] = it[rows]
+
+    work = np.where(feas)[0]
+    if work.size:
+        m_full = max_iter + 3                  # all slots + one spare column
+        m = min(8, m_full)                     # lazy store, grown on demand
+        b = _bucket(work.size)
+        pad = b - work.size
+        row_orig = np.concatenate([work, np.full(pad, -1, np.int64)])
+        with enable_x64():
+            state = _init_state(
+                jnp.asarray(np.concatenate([beta_f[work], np.ones(pad)])),
+                jnp.asarray(np.concatenate([h2f[work], np.ones(pad)])),
+                jnp.asarray(np.concatenate([e_f[work], np.full(pad, np.inf)])),
+                jnp.int32(work.size),
+                cfg=cfg, m=m, backend=backend, n_bisect=n_bisect)
+            t = 0
+            while t < max_iter:
+                state = _step_select(state, eps=eps)
+                act = np.asarray(state[_ACTIVE])
+                na = int(act.sum())
+                if na == 0:
+                    break
+                nb = _bucket(na)
+                if nb < b:                     # compact BEFORE projecting
+                    bp, bf, it = (np.asarray(state[_BESTP]),
+                                  np.asarray(state[_BESTF]),
+                                  np.asarray(state[_ITERS]))
+                    flush(~act, row_orig, bp, bf, it)
+                    keep = np.where(act)[0]
+                    idx = np.concatenate([keep, np.zeros(nb - na, np.int64)])
+                    state = _gather(state, jnp.asarray(idx), jnp.int32(na))
+                    row_orig = np.concatenate(
+                        [row_orig[keep], np.full(nb - na, -1, np.int64)])
+                    b = nb
+                if m < t + 3:                  # step t writes slot <= t+1
+                    m = min(2 * m, m_full)
+                    state = _grow(state, new_m=m)
+                state = _step_children(state, cfg=cfg, backend=backend,
+                                       n_bisect=n_bisect)
+                t += 1
+            bp, bf, it = (np.asarray(state[_BESTP]),
+                          np.asarray(state[_BESTF]),
+                          np.asarray(state[_ITERS]))
+            flush(np.ones(b, bool), row_orig, bp, bf, it)
+
+    return RAResult(
+        tau=tau.reshape(shape),
+        p=p.reshape(shape),
+        time_s=time_s.reshape(shape),
+        energy_j=energy.reshape(shape),
+        feasible=feas.reshape(shape),
+        iterations=iters_out.reshape(shape),
+    )
+
+
+def precompute_gamma(
+    beta,
+    h2_all,
+    cfg: WirelessConfig,
+    e_max=None,
+    **kw,
+) -> RAResult:
+    """Whole-horizon Γ: solve all (round, sub-channel, device) pairs at once.
+
+    h2_all has shape (rounds, K, N); beta broadcasts as (N,).  Returns an
+    RAResult whose fields are (rounds, K, N) — Γ is `time_s`, the
+    Proposition-1 mask is `feasible`.  One batched solve replaces `rounds`
+    host solver invocations (speedup tracked in BENCH_control_plane.json,
+    benchmarks/control_plane.py).
+    """
+    h2_all = np.asarray(h2_all, np.float64)
+    return solve_pairs_jit(np.asarray(beta, np.float64)[None, None, :],
+                           h2_all, cfg, e_max, **kw)

@@ -101,17 +101,25 @@ def plan_round(
     clusters: np.ndarray | None = None,
     fixed_ids: np.ndarray | None = None,
     e_max: np.ndarray | float | None = None,
+    ra: RAResult | None = None,
 ) -> RoundPlan:
-    """Solve one Stackelberg round. h2 is the (K, N) channel realization."""
+    """Solve one Stackelberg round. h2 is the (K, N) channel realization.
+
+    `ra` optionally supplies this round's precomputed Algorithm-1 solution
+    (fields shaped (K, N)).  Γ is selection-independent, so the whole-horizon
+    batch solver (`monotonic_jax.precompute_gamma`) can solve every round
+    before the training loop and `fl.sim` passes per-round slices here.
+    """
     k, n = h2.shape
     beta = np.asarray(beta, np.float64)
 
     # ---- follower substrate: Algorithm 1 over ALL pairs (leader predicts
     # the follower from the same Gamma; values are selection-independent). --
-    if policy.ra == "mo":
-        ra: RAResult = solve_pairs(beta[None, :], h2, cfg, e_max)
-    else:
-        ra = fixed_ra(beta[None, :], h2, cfg, e_max)
+    if ra is None:
+        if policy.ra == "mo":
+            ra = solve_pairs(beta[None, :], h2, cfg, e_max)
+        else:
+            ra = fixed_ra(beta[None, :], h2, cfg, e_max)
     gamma, feas = ra.time_s, ra.feasible
 
     # ---- leader: device selection (Algorithm 3 or a benchmark scheme). ----

@@ -6,14 +6,24 @@ power-law path loss), and per-round channel realizations.
 
 This is the *control plane* of the framework: it runs on the server between
 training rounds (the paper notes server compute is free, Sec. III-3).  All
-quantities are vectorized numpy over (K sub-channels x N devices) so a full
-round's model evaluates in microseconds; the learning plane (repro.fl /
-repro.train) is JAX.
+model functions are *backend-agnostic*: they dispatch to numpy or jax.numpy
+based on their array arguments (DESIGN.md §6), so the same closed forms back
+both the host-side reference solver (`core.monotonic`) and the jitted /
+Pallas device solver (`core.monotonic_jax`, `kernels.polyblock_project`).
+Vectorized over (K sub-channels x N devices) — or (rounds x K x N) for the
+whole-horizon batched path — a full round's model evaluates in microseconds.
 """
 from __future__ import annotations
 
 import dataclasses
 import numpy as np
+
+try:  # The learning plane requires JAX; the control plane merely exploits it.
+    import jax
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover - jax is baked into the image
+    jax = None
+    jnp = None
 
 __all__ = [
     "WirelessConfig",
@@ -97,19 +107,37 @@ def sample_channel_gains(
 
 
 # --------------------------------------------------------------------------
+# Backend dispatch: numpy by default, jax.numpy when any argument is a JAX
+# array (incl. tracers inside jit). numpy inputs are promoted to float64;
+# JAX inputs keep their dtype (float64 under an enable_x64 scope).
+# --------------------------------------------------------------------------
+
+def _xp(*args):
+    if jnp is not None and any(isinstance(a, jax.Array) for a in args):
+        return jnp
+    return np
+
+
+def _asfloat(xp, x):
+    return np.asarray(x, dtype=np.float64) if xp is np else jnp.asarray(x)
+
+
+# --------------------------------------------------------------------------
 # Computation model, eqs. (1)-(2).
 # --------------------------------------------------------------------------
 
 def compute_time(tau, beta, cfg: WirelessConfig):
     """T^cp = mu * beta / (tau * C)  (eq. 1)."""
-    tau = np.asarray(tau, dtype=np.float64)
-    return cfg.mu_cycles * np.asarray(beta, np.float64) / np.maximum(tau, 1e-30) / cfg.cpu_hz
+    xp = _xp(tau, beta)
+    tau = _asfloat(xp, tau)
+    return cfg.mu_cycles * _asfloat(xp, beta) / xp.maximum(tau, 1e-30) / cfg.cpu_hz
 
 
 def compute_energy(tau, beta, cfg: WirelessConfig):
     """E^cp = kappa0 * mu * beta * (tau*C)^2  (eq. 2)."""
-    tau = np.asarray(tau, dtype=np.float64)
-    return cfg.kappa0 * cfg.mu_cycles * np.asarray(beta, np.float64) * (tau * cfg.cpu_hz) ** 2
+    xp = _xp(tau, beta)
+    tau = _asfloat(xp, tau)
+    return cfg.kappa0 * cfg.mu_cycles * _asfloat(xp, beta) * (tau * cfg.cpu_hz) ** 2
 
 
 # --------------------------------------------------------------------------
@@ -119,14 +147,15 @@ def compute_energy(tau, beta, cfg: WirelessConfig):
 def comm_rate(p, h2, cfg: WirelessConfig):
     """R = B log2(1 + p |h|^2)  (eq. 3), bits/s.  log1p for precision at
     vanishing SNR (the Prop-1 infimum regime)."""
-    p = np.asarray(p, dtype=np.float64)
-    return cfg.bandwidth_hz * np.log1p(p * np.asarray(h2, np.float64)) / np.log(2.0)
+    xp = _xp(p, h2)
+    p = _asfloat(xp, p)
+    return cfg.bandwidth_hz * xp.log1p(p * _asfloat(xp, h2)) / np.log(2.0)
 
 
 def comm_time(p, h2, cfg: WirelessConfig):
     """T^cm = D(w) / R  (eq. 4)."""
     r = comm_rate(p, h2, cfg)
-    return cfg.model_bits / np.maximum(r, 1e-30)
+    return cfg.model_bits / _xp(p, h2).maximum(r, 1e-30)
 
 
 def comm_energy(p, h2, cfg: WirelessConfig):
@@ -135,7 +164,7 @@ def comm_energy(p, h2, cfg: WirelessConfig):
     Note the paper's convention: p in [0,1] is the *fraction* of P_t used;
     |h|^2 is already normalized by P_t / sigma^2.
     """
-    p = np.asarray(p, dtype=np.float64)
+    p = _asfloat(_xp(p, h2), p)
     return p * cfg.pt_w * comm_time(p, h2, cfg)
 
 

@@ -2,7 +2,7 @@
 the end-to-end FLOWN simulation harness."""
 from .client import make_local_trainer
 from .server import aggregate, masked_weighted_mean
-from .sim import SimConfig, SimHistory, TABLE1, run_simulation
+from .sim import SimConfig, SimHistory, TABLE1, run_many, run_simulation
 
 __all__ = [
     "make_local_trainer",
@@ -12,6 +12,7 @@ __all__ = [
     "SimHistory",
     "TABLE1",
     "run_simulation",
+    "run_many",
 ]
 from .hierarchical import HierSimConfig, run_hierarchical  # noqa: E402
 

@@ -4,18 +4,29 @@ Couples the control plane (Stackelberg round planning over a simulated
 wireless network) with the learning plane (real JAX training of the paper's
 models on seeded synthetic datasets).  One `run_simulation` call produces
 the trajectory behind one curve of Figs. 3-9.
+
+Control-plane scheduling is *hoisted out of the training loop*: Γ (the
+Algorithm-1 minimum-time matrix) is selection-independent, so every round's
+channel realization is pre-sampled and the full-horizon (rounds x K x N)
+tensor is solved in one batched jitted call (`core.monotonic_jax`) before
+the first training step.  `run_many` extends the same trick across
+simulations: all configured runs' horizons are flattened into a single
+solver batch, so planning cost is amortized over seeds/sweeps (Figs. 5-9
+sweep many configs) and the learning plane never waits on the host solver
+mid-run.  DESIGN.md §6.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
+    RAResult,
     RoundPolicy,
     WirelessConfig,
     init_aou,
@@ -24,7 +35,9 @@ from ..core import (
     plan_round,
     sample_channel_gains,
     sample_topology,
+    solve_pairs_jit,
 )
+from ..core.monotonic import fixed_ra
 from ..data.fl_datasets import (
     Dataset,
     FLPartition,
@@ -37,7 +50,7 @@ from ..train.optimizer import make_optimizer
 from .client import make_local_trainer
 from .server import aggregate
 
-__all__ = ["SimConfig", "SimHistory", "run_simulation", "TABLE1"]
+__all__ = ["SimConfig", "SimHistory", "run_simulation", "run_many", "TABLE1"]
 
 # Table I per-dataset settings: (model_bits, e_max, lr, batch, optimizer).
 TABLE1 = {
@@ -95,6 +108,7 @@ class SimHistory:
     grad_sq_norms: np.ndarray      # ||grad F||^2 per round (0 if untracked)
     beta: np.ndarray
     wall_s: float
+    plan_wall_s: float = 0.0       # control-plane share (Γ precompute)
 
 
 def _pad_partition(ds: Dataset, part: FLPartition):
@@ -111,13 +125,28 @@ def _pad_partition(ds: Dataset, part: FLPartition):
     return jnp.asarray(x), jnp.asarray(y), jnp.asarray(m)
 
 
-def run_simulation(cfg: SimConfig) -> SimHistory:
-    t_start = time.time()
+@dataclasses.dataclass
+class _Prepared:
+    """Everything sampled ahead of the training loop for one simulation."""
+
+    cfg: SimConfig
+    wcfg: WirelessConfig
+    rng: np.random.Generator
+    ds: Dataset
+    beta: np.ndarray
+    x_all: Any
+    y_all: Any
+    m_all: Any
+    h2_all: np.ndarray             # (rounds, K, N) pre-sampled channel gains
+    clusters: np.ndarray
+    fixed_ids: np.ndarray
+
+
+def _prepare(cfg: SimConfig) -> _Prepared:
+    """Sample data, topology, and the whole channel horizon up front."""
     rng = np.random.default_rng(cfg.seed)
     wcfg = cfg.wireless()
-    t1 = TABLE1[cfg.dataset]
 
-    # ---- data + partition -------------------------------------------------
     ds_kw = {} if cfg.n_samples is None else {"n": cfg.n_samples}
     ds = make_dataset(cfg.dataset, rng, **ds_kw)
     if cfg.partition == "dirichlet":
@@ -126,7 +155,92 @@ def run_simulation(cfg: SimConfig) -> SimHistory:
         part = partition_imbalanced_iid(rng, ds.n, cfg.n_devices)
     beta = part.beta.astype(np.float64)
     x_all, y_all, m_all = _pad_partition(ds, part)
-    x_full, y_full = jnp.asarray(ds.x), jnp.asarray(ds.y)
+
+    topo = sample_topology(rng, wcfg)
+    clusters = make_clusters(cfg.n_devices, cfg.n_subchannels, rng)
+    fixed_ids = rng.permutation(cfg.n_devices)[: cfg.n_subchannels]
+    h2_all = np.stack(
+        [sample_channel_gains(rng, wcfg, topo) for _ in range(cfg.rounds)])
+
+    return _Prepared(cfg=cfg, wcfg=wcfg, rng=rng, ds=ds, beta=beta,
+                     x_all=x_all, y_all=y_all, m_all=m_all, h2_all=h2_all,
+                     clusters=clusters, fixed_ids=fixed_ids)
+
+
+def _solve_horizons(
+    preps: Sequence[_Prepared], backend: str | None
+) -> tuple[list[RAResult], list[float]]:
+    """Algorithm 1 for every round of every prepared simulation, batched.
+
+    All MO-RA horizons are flattened into ONE jitted solver call per
+    wireless-constant group (the solver is elementwise over pairs, so
+    heterogeneous seeds/radii/budgets concatenate freely); FIX-RA horizons
+    are a closed form, evaluated per config.  Returns the per-sim RAResults
+    and each sim's share of planning wall time (group time split
+    proportionally to its pair count).
+    """
+    out: list[RAResult | None] = [None] * len(preps)
+    secs = [0.0] * len(preps)
+
+    # The solver is elementwise over pairs with e_max as a per-element
+    # operand, but the remaining wireless constants (model_bits, P_t, B,
+    # CPU model, ...) are baked into the closed forms — group by them.
+    def solver_key(wcfg: WirelessConfig) -> WirelessConfig:
+        return dataclasses.replace(
+            wcfg, n_devices=0, n_subchannels=0, radius_m=0.0, e_max_j=0.0)
+
+    groups: dict[WirelessConfig, list[int]] = {}
+    for i, p in enumerate(preps):
+        if p.cfg.policy.ra == "mo":
+            groups.setdefault(solver_key(p.wcfg), []).append(i)
+
+    for mo in groups.values():
+        h2_cat = np.concatenate([preps[i].h2_all.reshape(-1) for i in mo])
+        beta_cat = np.concatenate([
+            np.broadcast_to(preps[i].beta[None, None, :],
+                            preps[i].h2_all.shape).reshape(-1)
+            for i in mo])
+        emax_cat = np.concatenate([
+            np.full(preps[i].h2_all.size, preps[i].wcfg.e_max_j) for i in mo])
+        t0 = time.time()
+        ra_flat = solve_pairs_jit(beta_cat, h2_cat, preps[mo[0]].wcfg,
+                                  emax_cat, backend=backend)
+        group_s = time.time() - t0
+        group_pairs = h2_cat.size
+        off = 0
+        for i in mo:
+            shp = preps[i].h2_all.shape
+            sz = preps[i].h2_all.size
+            sl = slice(off, off + sz)
+            out[i] = RAResult(
+                tau=ra_flat.tau[sl].reshape(shp),
+                p=ra_flat.p[sl].reshape(shp),
+                time_s=ra_flat.time_s[sl].reshape(shp),
+                energy_j=ra_flat.energy_j[sl].reshape(shp),
+                feasible=ra_flat.feasible[sl].reshape(shp),
+                iterations=ra_flat.iterations[sl].reshape(shp),
+            )
+            secs[i] = group_s * sz / group_pairs
+            off += sz
+
+    for i, p in enumerate(preps):
+        if out[i] is None:
+            t0 = time.time()
+            out[i] = fixed_ra(p.beta[None, None, :], p.h2_all, p.wcfg)
+            secs[i] = time.time() - t0
+    return out, secs
+
+
+def _slice_ra(ra: RAResult, t: int) -> RAResult:
+    return RAResult(tau=ra.tau[t], p=ra.p[t], time_s=ra.time_s[t],
+                    energy_j=ra.energy_j[t], feasible=ra.feasible[t],
+                    iterations=ra.iterations[t])
+
+
+def _run_prepared(prep: _Prepared, ra_all: RAResult, plan_wall_s: float) -> SimHistory:
+    cfg, wcfg, rng, beta = prep.cfg, prep.wcfg, prep.rng, prep.beta
+    t_start = time.time()
+    t1 = TABLE1[cfg.dataset]
 
     # ---- model + trainer --------------------------------------------------
     model: SmallModel = get_small_model(cfg.dataset)
@@ -138,6 +252,7 @@ def run_simulation(cfg: SimConfig) -> SimHistory:
         model.loss, opt, batch_size=cfg.batch or t1["batch"],
         local_steps=cfg.local_steps, loss_per_example=model.loss_per_example,
     )
+    x_full, y_full = jnp.asarray(prep.ds.x), jnp.asarray(prep.ds.y)
     eval_loss = jax.jit(model.loss)
     eval_acc = jax.jit(model.accuracy)
     grad_norm_sq = jax.jit(
@@ -147,21 +262,16 @@ def run_simulation(cfg: SimConfig) -> SimHistory:
         )
     )
 
-    # ---- wireless topology + scheme state ---------------------------------
-    topo = sample_topology(rng, wcfg)
     aou = init_aou(cfg.n_devices)
-    clusters = make_clusters(cfg.n_devices, cfg.n_subchannels, rng)
-    fixed_ids = rng.permutation(cfg.n_devices)[: cfg.n_subchannels]
-
     k_slots = cfg.n_subchannels
     hist: dict[str, list] = {k: [] for k in (
         "round", "loss", "acc", "lat", "nsel", "ntx", "energy", "deficit", "gnorm")}
 
     for t in range(cfg.rounds):
-        h2 = sample_channel_gains(rng, wcfg, topo)
         plan = plan_round(
-            aou, beta, h2, wcfg, rng,
-            policy=cfg.policy, round_idx=t, clusters=clusters, fixed_ids=fixed_ids,
+            aou, beta, prep.h2_all[t], wcfg, rng,
+            policy=cfg.policy, round_idx=t, clusters=prep.clusters,
+            fixed_ids=prep.fixed_ids, ra=_slice_ra(ra_all, t),
         )
         aou = plan.aou_next
 
@@ -176,7 +286,8 @@ def run_simulation(cfg: SimConfig) -> SimHistory:
             key, k_round = jax.random.split(key)
             keys = jax.random.split(k_round, k_slots)
             client_params = trainer(
-                params, x_all[slot_ids], y_all[slot_ids], m_all[slot_ids], keys
+                params, prep.x_all[slot_ids], prep.y_all[slot_ids],
+                prep.m_all[slot_ids], keys
             )
             params = aggregate(params, client_params, jnp.asarray(slot_w))
 
@@ -206,5 +317,23 @@ def run_simulation(cfg: SimConfig) -> SimHistory:
         deficits=np.asarray(hist["deficit"]),
         grad_sq_norms=np.asarray(hist["gnorm"]),
         beta=beta,
-        wall_s=time.time() - t_start,
+        wall_s=time.time() - t_start + plan_wall_s,
+        plan_wall_s=plan_wall_s,
     )
+
+
+def run_many(cfgs: Sequence[SimConfig], *,
+             ra_backend: str | None = None) -> list[SimHistory]:
+    """Run several simulations, sharing ONE batched whole-horizon Γ solve.
+
+    The control-plane cost of a sweep (multiple seeds / radii / budgets,
+    Figs. 5-9) collapses into a single device batch; each simulation then
+    replays its precomputed per-round slices through `plan_round`.
+    """
+    preps = [_prepare(c) for c in cfgs]
+    ras, plan_walls = _solve_horizons(preps, ra_backend)
+    return [_run_prepared(p, ra, s) for p, ra, s in zip(preps, ras, plan_walls)]
+
+
+def run_simulation(cfg: SimConfig) -> SimHistory:
+    return run_many([cfg])[0]

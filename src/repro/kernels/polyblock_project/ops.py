@@ -1,0 +1,176 @@
+"""Dispatcher for the fused polyblock projection.
+
+Four interchangeable backends (tests assert pairwise agreement):
+
+  "ref"    — host NumPy bisection (`ref.py`), float64; also what the legacy
+             `core.monotonic._project` runs.
+  "bisect" — fused jax.numpy `lax.fori_loop` mirror of "ref" (same
+             arithmetic in the same order), jit/vmap-safe; float64 under an
+             `jax.experimental.enable_x64` scope.  Alias: "jnp".
+  "newton" — safeguarded Newton-bisection hybrid: each step evaluates g of
+             eq. (22) ONCE (the expensive log1p is shared between g and g'),
+             takes the Newton step when it stays inside the current bracket
+             and falls back to the midpoint otherwise.  Quadratic
+             convergence reaches the float64 root in ~8 engaged steps, so
+             `n_steps` = 16 replaces the reference's 60 bisections (~4x
+             fewer constraint evaluations) while agreeing with it to
+             ~1e-12 in zeta — this is the jitted solver's CPU default.
+  "pallas" — the VMEM-resident kernel (`kernel.py`), float32 (TPU has no
+             f64). Default on TPU; interpret-mode elsewhere.
+
+`project_jnp` / `project_newton` are exported separately because
+`core.monotonic_jax` embeds them inside its jitted solver steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.wireless import WirelessConfig, total_energy
+from .kernel import polyblock_project_call
+from .ref import TINY, project_ref
+
+__all__ = ["polyblock_project", "project_jnp", "project_newton",
+           "project_pallas"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def project_jnp(v, beta, h2, e_max, cfg: WirelessConfig, *, n_bisect: int = 60):
+    """Fused jnp mirror of `ref.project_ref` (same arithmetic, same order)."""
+    tau_v, p_v = v[..., 0], v[..., 1]
+
+    def g_con(tau, p):
+        return total_energy(tau, p, beta, h2, cfg) - e_max
+
+    need_root = g_con(tau_v, p_v) > 0.0
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        take_hi = g_con(mid * tau_v, mid * p_v) > 0.0
+        return jnp.where(take_hi, lo, mid), jnp.where(take_hi, mid, hi)
+
+    lo = jnp.full_like(tau_v, TINY)
+    hi = jnp.ones_like(tau_v)
+    lo, _ = jax.lax.fori_loop(0, n_bisect, body, (lo, hi))
+    zeta = jnp.where(need_root, lo, 1.0)
+    return zeta[..., None] * v
+
+
+def project_newton(v, beta, h2, e_max, cfg: WirelessConfig, *,
+                   n_steps: int = 14):
+    """Safeguarded log-space Newton root of g(zeta * v) = 0 on (0, 1].
+
+    Newton in y = log(zeta) — cand = x * exp(-g / (x g')) — so convergence is
+    scale-free: roots spanning many decades (they reach ~1e-4 for weak
+    channels) are approached multiplicatively, where linear-space Newton
+    stagnates against its bracket.  The bisection bracket [lo, hi] is kept
+    for guaranteed convergence with a *geometric*-mean fallback whenever the
+    candidate leaves the open bracket (NaN/inf candidates — e.g. padded rows
+    with e_max = inf — fail the comparison too, keeping them harmless).  With
+
+        g(x)  = a x^2 + b x / L(cx) - e_max,   L = log1p,
+        g'(x) = 2 a x + b (L(cx) - cx/(1 + cx)) / L(cx)^2,
+
+    where a = kappa0 mu beta (tau_v C)^2, b = p_v P_t D ln2 / B and
+    c = p_v |h|^2, so g and g' share one log1p per step.
+
+    Warm start: as zeta -> 0 the communication term flattens to its
+    Proposition-1 infimum b/c, so x0 = sqrt((e_max - b/c) / a) is the exact
+    root of the low-SNR limit — Newton then only corrects the rate curvature.
+    14 steps reproduce the reference 60-step bisection root to ~1e-9
+    relative on Prop-1 feasible pairs (tests/test_monotonic_jax.py) at ~4x
+    fewer transcendental evaluations.
+    """
+    tau_v, p_v = v[..., 0], v[..., 1]
+    a = cfg.kappa0 * cfg.mu_cycles * beta * (tau_v * cfg.cpu_hz) ** 2
+    b = p_v * cfg.pt_w * cfg.model_bits * np.log(2.0) / cfg.bandwidth_hz
+    c = p_v * h2
+
+    def g_gp(x):
+        u = c * x
+        el = jnp.log1p(u)
+        elc = jnp.maximum(el, 1e-300)
+        g = a * x * x + b * x / elc - e_max
+        gp = 2.0 * a * x + b * (el - u / (1.0 + u)) / (elc * elc)
+        return g, gp
+
+    need_root = g_gp(jnp.ones_like(tau_v))[0] > 0.0
+    x0 = jnp.sqrt(jnp.maximum(e_max - b / jnp.maximum(c, 1e-300), 1e-300)
+                  / jnp.maximum(a, 1e-300))
+    x0 = jnp.clip(x0, TINY, 1.0 - 1e-9)
+
+    def body(_, carry):
+        lo, hi, x = carry
+        g, gp = g_gp(x)
+        pos = g > 0.0
+        lo = jnp.where(pos, lo, x)
+        hi = jnp.where(pos, x, hi)
+        cand = x * jnp.exp(-g / (x * gp))
+        ok = (cand > lo) & (cand < hi)
+        return lo, hi, jnp.where(ok, cand, jnp.sqrt(lo * hi))
+
+    lo = jnp.full_like(tau_v, TINY)
+    hi = jnp.ones_like(tau_v)
+    lo, hi, x = jax.lax.fori_loop(0, n_steps, body, (lo, hi, x0))
+    zeta = jnp.where(need_root, jnp.clip(x, TINY, 1.0), 1.0)
+    return zeta[..., None] * v
+
+
+def project_pallas(v, beta, h2, e_max, cfg: WirelessConfig, *,
+                   n_bisect: int = 60, bm: int = 8, interpret: bool | None = None):
+    """Pad + tile the flattened batch to (rows, 128) and run the kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    v = jnp.asarray(v, jnp.float32)
+    shape = v.shape[:-1]
+    n = int(np.prod(shape)) if shape else 1
+    flat = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), shape).reshape(-1)
+    tau_v, p_v = v[..., 0].reshape(-1), v[..., 1].reshape(-1)
+    betaf, h2f, emaxf = flat(beta), flat(h2), flat(e_max)
+
+    tile = bm * 128
+    pad = (-n) % tile
+    if pad:
+        # Padding lanes bisect a harmless dummy element (g(1,1) <= 0 there).
+        ones = jnp.ones(pad, jnp.float32)
+        tau_v, p_v = jnp.concatenate([tau_v, ones]), jnp.concatenate([p_v, ones])
+        betaf = jnp.concatenate([betaf, ones])
+        h2f = jnp.concatenate([h2f, ones])
+        emaxf = jnp.concatenate([emaxf, jnp.full(pad, 1e9, jnp.float32)])
+    shape2d = (-1, 128)
+    zeta = polyblock_project_call(
+        tau_v.reshape(shape2d), p_v.reshape(shape2d), betaf.reshape(shape2d),
+        h2f.reshape(shape2d), emaxf.reshape(shape2d),
+        n_bisect=n_bisect, kappa0_mu=cfg.kappa0 * cfg.mu_cycles,
+        cpu_hz=cfg.cpu_hz, pt_w=cfg.pt_w, model_bits=cfg.model_bits,
+        bandwidth_hz=cfg.bandwidth_hz, bm=bm, interpret=interpret,
+    )
+    zeta = zeta.reshape(-1)[:n].reshape(shape)
+    return zeta[..., None] * v
+
+
+def polyblock_project(v, beta, h2, e_max, cfg: WirelessConfig, *,
+                      n_bisect: int = 60, backend: str | None = None,
+                      interpret: bool | None = None):
+    """Project a batch of vertices.
+
+    backend: None (auto: "pallas" on TPU else "newton"), "ref", "bisect"
+    (alias "jnp"), "newton", or "pallas".
+    """
+    if backend is None:
+        backend = "pallas" if _on_tpu() else "newton"
+    if backend == "ref":
+        return project_ref(v, beta, h2, e_max, cfg, n_bisect=n_bisect)
+    if backend in ("bisect", "jnp"):
+        return project_jnp(jnp.asarray(v), beta, h2, e_max, cfg, n_bisect=n_bisect)
+    if backend == "newton":
+        return project_newton(jnp.asarray(v), beta, h2, e_max, cfg)
+    if backend == "pallas":
+        return project_pallas(v, beta, h2, e_max, cfg,
+                              n_bisect=n_bisect, interpret=interpret)
+    raise ValueError(f"unknown backend: {backend}")

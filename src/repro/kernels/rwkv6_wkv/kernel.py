@@ -29,7 +29,7 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
 
     @pl.when(it == 0)
     def _init():
-        state[...] = s0_ref[0].astype(jnp.float32)
+        state[...] = s0_ref[...][0].astype(jnp.float32)
 
     def step(t, _):
         r = r_ref[0, t].astype(jnp.float32)   # (hs,)
@@ -39,8 +39,8 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
         u = u_ref[0].astype(jnp.float32)
         kv = k[:, None] * v[None, :]          # (hs, hs)
         y = ((state[...] + u[:, None] * kv) * r[:, None]).sum(axis=0)
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)),
-                 y[None].astype(y_ref.dtype))
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 y[None, None].astype(y_ref.dtype))
         state[...] = w[:, None] * state[...] + kv
         return 0
 
@@ -48,7 +48,9 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
 
     @pl.when(it == nt - 1)
     def _finish():
-        sout_ref[0] = state[...].astype(sout_ref.dtype)
+        # Full-block store: integer-indexed ref writes hit a discharge bug
+        # in interpret mode on this jax version.
+        sout_ref[...] = state[...][None].astype(sout_ref.dtype)
 
 
 def wkv6_call(r, k, v, w, u, s0, *, bt: int = 128, interpret: bool = False):

@@ -1,12 +1,19 @@
 """Shared test config. NOTE: no XLA_FLAGS here — smoke tests must see the
 host's real (single) device; only the dry-run forces 512 placeholder
-devices, in its own process."""
+devices, in its own process.
+
+hypothesis is optional: without it the property-based test modules skip
+themselves via pytest.importorskip and the rest of the suite still runs."""
+import importlib.util
+
 import numpy as np
 import pytest
-from hypothesis import settings
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+if importlib.util.find_spec("hypothesis") is not None:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
 
 
 @pytest.fixture

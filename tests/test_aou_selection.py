@@ -1,5 +1,7 @@
 """AoU state machine (eq. 6-7) + Algorithm 3 device selection."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,5 +1,7 @@
 """Algorithm 2 (swap matching): stability (Def. 3), convergence, quality."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,6 +1,7 @@
 """Algorithm 1 (polyblock outer approximation) vs the brute-force oracle."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import WirelessConfig, fixed_ra, grid_oracle, is_infeasible, solve_pairs

@@ -1,6 +1,7 @@
 """Round orchestration: Stackelberg plan invariants + all benchmark policies."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import RoundPolicy, WirelessConfig
-from repro.fl import SimConfig, run_simulation
+from repro.fl import SimConfig, run_many, run_simulation
 
 
 def test_proposed_scheme_beats_fixed_ds():
@@ -45,6 +45,23 @@ def test_radius_degrades_participation():
                                    radius_m=1500.0, eval_every=1, seed=3,
                                    policy=RoundPolicy(ds="random")))
     assert near.n_transmitted.mean() > far.n_transmitted.mean()
+
+
+def test_run_many_matches_individual_runs():
+    """run_many shares one batched whole-horizon Γ solve across sims; each
+    trajectory must equal its standalone run_simulation twin (mixed RA
+    policies exercise both the batched MO-RA and closed-form FIX-RA paths)."""
+    cfgs = [
+        SimConfig(dataset="mnist", rounds=6, n_samples=120, eval_every=2,
+                  seed=s, policy=RoundPolicy(ds="random", ra=ra))
+        for s, ra in ((0, "mo"), (1, "mo"), (2, "fix"))
+    ]
+    batched = run_many(cfgs)
+    for cfg, hist in zip(cfgs, batched):
+        solo = run_simulation(cfg)
+        np.testing.assert_allclose(hist.global_loss, solo.global_loss, rtol=1e-6)
+        np.testing.assert_allclose(hist.latency_s, solo.latency_s, rtol=1e-9)
+        np.testing.assert_array_equal(hist.n_transmitted, solo.n_transmitted)
 
 
 def test_energy_budget_increases_participation():

@@ -1,6 +1,7 @@
 """System model (eqs. 1-10) + Propositions 1-2."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, strategies as st
 
 from repro.core import (
