@@ -8,6 +8,7 @@ Control-plane algorithms (all vectorized, run server-side between rounds):
   matching      -- Algorithm 2 (swap matching, M-SA)
   aou           -- Age-of-Update state, eqs. 6-7
   selection     -- Algorithm 3 (+ benchmark schemes)
+  leader_jax    -- Algorithms 2-3 + AoU as pure jnp (scan-engine leader)
   stackelberg   -- per-round game orchestration
   convergence   -- Proposition 3 bound
 """
@@ -22,6 +23,13 @@ from .matching import (
     swap_matching,
     swap_matching_loop,
 )
+from .leader_jax import (
+    leader_round,
+    prepare_utility_jnp,
+    priority_order,
+    step_age,
+    swap_matching_jnp,
+)
 from .monotonic import RAResult, fixed_ra, grid_oracle, solve_pairs
 from .monotonic_jax import precompute_gamma, solve_pairs_jit
 from .selection import (
@@ -33,7 +41,13 @@ from .selection import (
     select_random,
     select_topk,
 )
-from .stackelberg import RoundPlan, RoundPolicy, make_clusters, plan_round
+from .stackelberg import (
+    RoundPlan,
+    RoundPolicy,
+    RoundRandomness,
+    make_clusters,
+    plan_round,
+)
 from .wireless import (
     Topology,
     WirelessConfig,

@@ -1,0 +1,260 @@
+"""Device-resident leader plane: Algorithms 2-3 + AoU as pure jnp (DESIGN.md §8).
+
+The host leader (`aou` / `selection` / `matching`) re-enters Python every
+round; this module ports the whole per-round Stackelberg leader step to
+fixed-shape jax.numpy so `fl.sim` can fuse it with the learning plane inside
+one `lax.scan` over rounds (and `vmap` it across seeds):
+
+  * AoU update (eq. 6) — a `where` over the age vector;
+  * priority list (eq. 43) — stable argsort of age_n * beta_n (the positive
+    normalizer sum_i A_i divides out of eq. 7, so integer-exact products
+    replace the host's alpha_n * beta_n without reordering anything);
+  * Algorithm 3 — a `lax.while_loop` over a FIXED-SIZE id buffer of
+    S = min(K, N) slots: each iteration re-matches the candidate buffer,
+    then replaces the j-th infeasible slot with `order[next_ptr + j]` via a
+    cumsum-indexed masked gather (the host's sequential "next unselected in
+    Q" walk, vectorized);
+  * Algorithm 2 — a `lax.while_loop` over the S x S utility-delta blocking
+    matrix with the host implementation's scan-cursor proposal order, so
+    both terminate at the *same* two-sided exchange-stable matching;
+  * the benchmark schemes (top-K / random / cluster / fixed DS, R-SA).
+
+Candidate buffers are padded to S with invalid slots (cluster DS selects a
+variable-size rotation class): pad slots carry U_MAX utilities and are
+masked out of the blocking matrix, so real devices can neither swap with a
+pad nor grab its channel — exactly the host semantics where unassigned
+sub-channels are simply absent from the proposal loop.  Randomness is
+INJECTED, not drawn: callers pass per-round permutations (`sel_perm` for
+random DS, `assign_perm` for the initial matching / R-SA) pre-sampled on the
+host, so the scan engine and the host loop consume the identical stream and
+the differential harness (tests/test_scan_equivalence.py) can pin exact
+transmitted-set / AoU equivalence.  See DESIGN.md §8 for the documented
+RNG-stream deviation from the legacy `np.random.Generator` path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matching import U_MAX
+
+__all__ = [
+    "prepare_utility_jnp",
+    "step_age",
+    "priority_order",
+    "swap_matching_jnp",
+    "leader_round",
+]
+
+
+def prepare_utility_jnp(gamma, feasible):
+    """Eq. (30): U = Gamma where feasible, U_max otherwise (jnp mirror)."""
+    gamma_u = jnp.where(feasible, gamma, U_MAX)
+    return jnp.where(jnp.isfinite(gamma_u), gamma_u, U_MAX)
+
+
+def step_age(age, transmitted):
+    """Eq. (6): transmitted devices reset to 1, everyone else ages by 1."""
+    return jnp.where(transmitted, 1, age + 1).astype(age.dtype)
+
+
+def priority_order(age, beta):
+    """Eq. (43) order: ids sorted by alpha_n * beta_n descending, ties by id.
+
+    alpha_n = A_n / sum_i A_i (eq. 7); the normalizer is a positive constant
+    across n, so sorting A_n * beta_n is order-identical — and exact in
+    float32 for the integer ages/data-sizes of the simulation (products stay
+    far below 2^24).  jnp argsort is stable, matching the host's
+    `np.argsort(-prio, kind="stable")` tie-break.
+    """
+    prio = age.astype(jnp.float32) * beta.astype(jnp.float32)
+    return jnp.argsort(-prio).astype(jnp.int32)
+
+
+def swap_matching_jnp(gamma_u, valid, initial, *, max_rounds: int = 200):
+    """Algorithm 2 over a fixed S-slot candidate buffer (jnp while_loop).
+
+    Mirrors `matching.swap_matching`'s vectorized cursor formulation: each
+    iteration evaluates the full S x S Definition-2 blocking matrix with
+    three broadcast comparisons, executes the first blocking pair at or
+    after the flat row-major cursor, and wraps into a new proposal round
+    exactly like the reference nested loops.  `valid` masks pad slots out of
+    the blocking matrix (pairs touching a pad are never blocking), so the
+    real slots — always a prefix of the buffer — replay the host trajectory
+    pair-for-pair and the wrap bookkeeping (which only observes blocking
+    pairs) stays aligned.
+
+    Args:
+      gamma_u: (K, S) utilities, U_MAX at infeasible/pad entries.
+      valid:   (S,) slot-validity mask (real device vs padding).
+      initial: (S,) initial channel per slot (the injected K-permutation
+        prefix; pads hold the leftover channels, which the host never
+        assigns — masked swaps keep them parked there).
+
+    Returns:
+      (assignment, feasible, n_swaps, n_rounds) with assignment (S,) int32
+      and feasible (S,) = assigned channel is Prop-1 feasible AND the slot
+      is real.
+    """
+    s = gamma_u.shape[1]
+    nn = s * s
+    dev = jnp.arange(s)
+    pos = jnp.arange(nn)
+    pair_ok = (valid[:, None] & valid[None, :] & ~jnp.eye(s, dtype=bool)).ravel()
+
+    def blocking(assignment):
+        u = gamma_u[assignment, dev]                 # (S,)
+        a = gamma_u[assignment]                      # A[i, j] = U[ch_i, j]
+        no_worse_n = a.T <= u[:, None]
+        no_worse_n2 = a <= u[None, :]
+        strict = (a.T < u[:, None]) | (a < u[None, :])
+        return (no_worse_n & no_worse_n2 & strict).ravel() & pair_ok
+
+    def cond(st):
+        return ~st[-1]
+
+    def body(st):
+        assignment, cursor, swapped, n_rounds, n_swaps, _ = st
+        cand = blocking(assignment) & (pos >= cursor)
+        has = cand.any()
+        q = jnp.argmax(cand).astype(jnp.int32)       # first blocking >= cursor
+        n1, n2 = q // s, q % s
+        swap = assignment.at[n1].set(assignment[n2]).at[n2].set(assignment[n1])
+        assignment = jnp.where(has, swap, assignment)
+        n_swaps = n_swaps + has.astype(jnp.int32)
+        swapped = swapped | has
+        # End of a full proposal round: scanned past the last pair, or no
+        # blocking pair remains ahead of the cursor.
+        end = (~has) | (q + 1 >= nn)
+        n_rounds = n_rounds + end.astype(jnp.int32)
+        done = end & ((~swapped) | (n_rounds >= max_rounds))
+        cursor = jnp.where(end, 0, q + 1)
+        swapped = swapped & ~end
+        return (assignment, cursor, swapped, n_rounds, n_swaps, done)
+
+    init = (jnp.asarray(initial, jnp.int32), jnp.int32(0), jnp.bool_(False),
+            jnp.int32(0), jnp.int32(0), jnp.bool_(max_rounds <= 0))
+    assignment, _, _, n_rounds, n_swaps, _ = jax.lax.while_loop(cond, body, init)
+    feasible = (gamma_u[assignment, dev] < U_MAX) & valid
+    return assignment, feasible, n_swaps, n_rounds
+
+
+def leader_round(
+    age,
+    beta,
+    gamma,
+    feasible,
+    sel_perm,
+    assign_perm,
+    round_idx,
+    clusters,
+    fixed_ids,
+    *,
+    ds: str,
+    sa: str,
+    k: int,
+    n: int,
+    n_clusters: int = 1,
+    max_rounds: int = 200,
+):
+    """One leader step (Algorithm 3 or a benchmark DS + Algorithm 2 or R-SA).
+
+    Pure fixed-shape function of the round state — trace it inside
+    `lax.scan` / `vmap`.  `ds`/`sa`/`k`/`n` are static.
+
+    Args:
+      age:         (N,) int AoU ages.
+      beta:        (N,) data sizes.
+      gamma:       (K, N) minimum-time matrix (Algorithm 1 output).
+      feasible:    (K, N) Proposition-1 mask.
+      sel_perm:    (N,) injected device permutation (random DS).
+      assign_perm: (K,) injected channel permutation (matching init / R-SA).
+      round_idx:   scalar round index (cluster rotation).
+      clusters:    (N,) cluster id per device; `n_clusters` static.
+      fixed_ids:   (S,) fixed DS ids, S = min(K, N).
+
+    Returns a dict: selected/transmitted (N,) bool, channel_of (N,) int32
+    (-1 where unassigned), age_next (N,), iterations (Algorithm-3 count).
+    """
+    s = min(k, n)
+    slot = jnp.arange(s)
+    gamma_u = prepare_utility_jnp(gamma, feasible)
+    all_valid = jnp.ones(s, dtype=bool)
+
+    def match(ids, valid):
+        """Follower prediction over the candidate buffer."""
+        ids_g = jnp.where(valid, ids, 0)
+        sub = jnp.where(valid[None, :], gamma_u[:, ids_g], U_MAX)
+        init = assign_perm[:s].astype(jnp.int32)
+        if sa == "matching":
+            assignment, feas_m, _, _ = swap_matching_jnp(
+                sub, valid, init, max_rounds=max_rounds)
+        else:  # R-SA: the injected permutation IS the assignment
+            assignment = init
+            feas_m = (sub[assignment, slot] < U_MAX) & valid
+        return assignment, feas_m
+
+    it = jnp.int32(1)
+    if ds in ("alg3", "aou_topk"):
+        order = priority_order(age, beta)
+
+    if ds == "alg3":
+        max_iter = n                      # host default: one pass over Q
+
+        def a3_cond(st):
+            return ~st[-1]
+
+        def a3_body(st):
+            ids, next_ptr, a3_it, _, _, _ = st
+            assignment, feas_m = match(ids, all_valid)
+            a3_it = a3_it + 1
+            unfeas = ~feas_m
+            # Paper line 6: stop when every sub-channel carries a
+            # transmitting device, or Q is exhausted, or out of iterations.
+            stop = (~unfeas.any()) | (next_ptr >= n) | (a3_it >= max_iter)
+            # Lines 9-10: the j-th infeasible slot takes order[next_ptr + j].
+            j = jnp.cumsum(unfeas.astype(jnp.int32)) - 1
+            src = next_ptr + j
+            take = unfeas & (src < n) & ~stop
+            ids = jnp.where(take, order[jnp.clip(src, 0, n - 1)], ids)
+            next_ptr = next_ptr + take.sum(dtype=jnp.int32)
+            return (ids, next_ptr, a3_it, assignment, feas_m, stop)
+
+        st0 = (order[:s], jnp.int32(s), jnp.int32(0),
+               jnp.zeros(s, jnp.int32), jnp.zeros(s, bool), jnp.bool_(False))
+        ids, _, it, assignment, feas_m, _ = jax.lax.while_loop(
+            a3_cond, a3_body, st0)
+        valid = all_valid
+    elif ds == "aou_topk":
+        ids, valid = order[:s], all_valid
+        assignment, feas_m = match(ids, valid)
+    elif ds == "random":
+        ids, valid = sel_perm[:s].astype(jnp.int32), all_valid
+        assignment, feas_m = match(ids, valid)
+    elif ds == "cluster":
+        mask = clusters == (round_idx % n_clusters)
+        ids = jnp.nonzero(mask, size=s, fill_value=0)[0].astype(jnp.int32)
+        valid = slot < mask.sum()
+        assignment, feas_m = match(ids, valid)
+    elif ds == "fixed":
+        ids, valid = fixed_ids.astype(jnp.int32), all_valid
+        assignment, feas_m = match(ids, valid)
+    else:
+        raise ValueError(f"unknown ds: {ds}")
+
+    # ---- scatter slots back to device-indexed arrays (pads land on the
+    # sacrificial row n and are sliced away). ------------------------------
+    tx_slot = feas_m & valid
+    ids_s = jnp.where(valid, ids, n)
+    selected = jnp.zeros(n + 1, bool).at[ids_s].set(True)[:n]
+    transmitted = jnp.zeros(n + 1, bool).at[ids_s].set(tx_slot)[:n]
+    ch = jnp.where(tx_slot, assignment, -1)
+    channel_of = jnp.full(n + 1, -1, jnp.int32).at[ids_s].set(ch)[:n]
+
+    return {
+        "selected": selected,
+        "transmitted": transmitted,
+        "channel_of": channel_of,
+        "age_next": step_age(age, transmitted),
+        "iterations": it,
+    }

@@ -208,12 +208,23 @@ def is_two_sided_exchange_stable(gamma_u: np.ndarray, assignment: np.ndarray) ->
 
 
 def random_assignment(
-    gamma: np.ndarray, feasible: np.ndarray, rng: np.random.Generator
+    gamma: np.ndarray,
+    feasible: np.ndarray,
+    rng: np.random.Generator,
+    *,
+    perm: np.ndarray | None = None,
 ) -> MatchResult:
-    """R-SA baseline (Sec. VI): a uniformly random one-to-one assignment."""
+    """R-SA baseline (Sec. VI): a uniformly random one-to-one assignment.
+
+    `perm` optionally injects the K-permutation instead of drawing it from
+    `rng` — the scan engine pre-samples per-round permutations so both
+    engines consume one stream (DESIGN.md §8).
+    """
     k, n_sel = gamma.shape
     gamma_u = prepare_utility(gamma, feasible)
-    assignment = rng.permutation(k)[:n_sel].astype(np.int64)
+    if perm is None:
+        perm = rng.permutation(k)
+    assignment = np.asarray(perm)[:n_sel].astype(np.int64)
     utils = _utilities(gamma_u, assignment)
     return MatchResult(
         assignment=assignment,

@@ -46,14 +46,24 @@ def priority_list(alpha: np.ndarray, beta: np.ndarray) -> np.ndarray:
     return np.argsort(-prio, kind="stable")
 
 
-def _assign(gamma, feasible, ids, sa, rng):
-    """Run the follower's sub-channel assignment over the candidate set."""
+def _assign(gamma, feasible, ids, sa, rng, assign_perm=None):
+    """Run the follower's sub-channel assignment over the candidate set.
+
+    `assign_perm` optionally injects the K-permutation used as the initial
+    matching (M-SA) or the assignment itself (R-SA) in place of an `rng`
+    draw, so the host loop and the scan engine share one randomness stream
+    (DESIGN.md §8).  Within an Algorithm-3 replacement loop the same
+    injected permutation is reused for every iteration — a documented
+    deviation from the legacy per-iteration draw.
+    """
     sub_gamma = gamma[:, ids]
     sub_feas = feasible[:, ids]
+    n_sel = len(ids)
+    initial = None if assign_perm is None else np.asarray(assign_perm)[:n_sel]
     if sa == "matching":
-        return swap_matching(sub_gamma, sub_feas, rng)
+        return swap_matching(sub_gamma, sub_feas, rng, initial=initial)
     elif sa == "random":
-        return random_assignment(sub_gamma, sub_feas, rng)
+        return random_assignment(sub_gamma, sub_feas, rng, perm=assign_perm)
     raise ValueError(f"unknown sub-channel assignment scheme: {sa}")
 
 
@@ -83,6 +93,7 @@ def select_aou_alg3(
     *,
     sa: str = "matching",
     max_iter: int | None = None,
+    assign_perm: np.ndarray | None = None,
 ) -> SelectionOutcome:
     """The proposed scheme: Algorithm 3 with follower prediction.
 
@@ -100,7 +111,7 @@ def select_aou_alg3(
     it = 0
     while True:
         it += 1
-        match = _assign(gamma, feasible, np.asarray(ids), sa, rng)
+        match = _assign(gamma, feasible, np.asarray(ids), sa, rng, assign_perm)
         unfeas = [i for i, ok in enumerate(match.feasible) if not ok]
         # Paper line 6: stop when every sub-channel carries a transmitting
         # device, or the priority list is exhausted.
@@ -119,36 +130,46 @@ def select_aou_alg3(
 
 
 def select_topk(
-    alpha, beta, gamma, feasible, rng, *, sa: str = "matching"
+    alpha, beta, gamma, feasible, rng, *, sa: str = "matching",
+    assign_perm: np.ndarray | None = None,
 ) -> SelectionOutcome:
     """"AoU based DS" benchmark: top-K of eq. (43), no replacement loop."""
     k, n = gamma.shape
     ids = priority_list(alpha, beta)[: min(k, n)]
-    match = _assign(gamma, feasible, ids, sa, rng)
+    match = _assign(gamma, feasible, ids, sa, rng, assign_perm)
     return _finalize(n, ids, match, 1)
 
 
-def select_random(gamma, feasible, rng, *, sa: str = "matching") -> SelectionOutcome:
-    """Random DS benchmark: K devices uniformly at random."""
+def select_random(gamma, feasible, rng, *, sa: str = "matching",
+                  sel_perm: np.ndarray | None = None,
+                  assign_perm: np.ndarray | None = None) -> SelectionOutcome:
+    """Random DS benchmark: K devices uniformly at random.
+
+    `sel_perm` optionally injects the device permutation (scan-engine
+    stream sharing, DESIGN.md §8)."""
     k, n = gamma.shape
-    ids = rng.permutation(n)[: min(k, n)]
-    match = _assign(gamma, feasible, ids, sa, rng)
+    perm = rng.permutation(n) if sel_perm is None else np.asarray(sel_perm)
+    ids = perm[: min(k, n)]
+    match = _assign(gamma, feasible, ids, sa, rng, assign_perm)
     return _finalize(n, ids, match, 1)
 
 
 def select_cluster(
-    gamma, feasible, rng, round_idx: int, clusters: np.ndarray, *, sa: str = "matching"
+    gamma, feasible, rng, round_idx: int, clusters: np.ndarray, *,
+    sa: str = "matching", assign_perm: np.ndarray | None = None,
 ) -> SelectionOutcome:
     """Cluster-based DS: devices pre-partitioned into ceil(N/K) clusters,
     clusters selected in rotation."""
     k, n = gamma.shape
     n_clusters = int(clusters.max()) + 1
     ids = np.where(clusters == (round_idx % n_clusters))[0][: min(k, n)]
-    match = _assign(gamma, feasible, ids, sa, rng)
+    match = _assign(gamma, feasible, ids, sa, rng, assign_perm)
     return _finalize(n, ids, match, 1)
 
 
-def select_fixed(gamma, feasible, rng, fixed_ids: np.ndarray, *, sa: str = "matching") -> SelectionOutcome:
+def select_fixed(gamma, feasible, rng, fixed_ids: np.ndarray, *,
+                 sa: str = "matching",
+                 assign_perm: np.ndarray | None = None) -> SelectionOutcome:
     """Fixed DS: the same K devices every round."""
-    match = _assign(gamma, feasible, np.asarray(fixed_ids), sa, rng)
+    match = _assign(gamma, feasible, np.asarray(fixed_ids), sa, rng, assign_perm)
     return _finalize(gamma.shape[1], np.asarray(fixed_ids), match, 1)

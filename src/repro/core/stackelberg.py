@@ -36,7 +36,24 @@ from .selection import (
 )
 from .wireless import WirelessConfig
 
-__all__ = ["RoundPolicy", "RoundPlan", "plan_round", "make_clusters"]
+__all__ = ["RoundPolicy", "RoundPlan", "RoundRandomness", "plan_round",
+           "make_clusters"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRandomness:
+    """Pre-sampled per-round permutations, injected in place of `rng` draws.
+
+    `fl.sim` samples one of these per round up front so the host loop and
+    the scan engine (core.leader_jax) consume the identical randomness
+    stream and the differential harness can pin exact equivalence
+    (DESIGN.md §8).  Within an Algorithm-3 replacement loop the single
+    `assign_perm` seeds every iteration's initial matching — a documented
+    deviation from the legacy per-iteration `rng` draw.
+    """
+
+    sel_perm: np.ndarray     # (N,) device permutation (random DS)
+    assign_perm: np.ndarray  # (K,) channel permutation (matching init / R-SA)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +119,7 @@ def plan_round(
     fixed_ids: np.ndarray | None = None,
     e_max: np.ndarray | float | None = None,
     ra: RAResult | None = None,
+    randomness: RoundRandomness | None = None,
 ) -> RoundPlan:
     """Solve one Stackelberg round. h2 is the (K, N) channel realization.
 
@@ -109,6 +127,8 @@ def plan_round(
     (fields shaped (K, N)).  Γ is selection-independent, so the whole-horizon
     batch solver (`monotonic_jax.precompute_gamma`) can solve every round
     before the training loop and `fl.sim` passes per-round slices here.
+    `randomness` optionally injects this round's pre-sampled permutations
+    in place of `rng` draws (scan-engine stream sharing, DESIGN.md §8).
     """
     k, n = h2.shape
     beta = np.asarray(beta, np.float64)
@@ -123,21 +143,33 @@ def plan_round(
     gamma, feas = ra.time_s, ra.feasible
 
     # ---- leader: device selection (Algorithm 3 or a benchmark scheme). ----
-    alpha = aou.weights
+    # Eq. (43) ranks by alpha_n * beta_n; the eq. (7) normalizer sum_i A_i
+    # is a positive constant across n, so ranking raw ages is equivalent —
+    # and keeps integer-exact products, so `priority_list`'s documented
+    # by-id tie-break really happens (dividing first leaks float rounding
+    # noise into exact ties, silently reordering them).
+    alpha = aou.age.astype(np.float64)
+    sel_perm = None if randomness is None else randomness.sel_perm
+    assign_perm = None if randomness is None else randomness.assign_perm
     if policy.ds == "alg3":
-        out = select_aou_alg3(alpha, beta, gamma, feas, rng, sa=policy.sa)
+        out = select_aou_alg3(alpha, beta, gamma, feas, rng, sa=policy.sa,
+                              assign_perm=assign_perm)
     elif policy.ds == "aou_topk":
-        out = select_topk(alpha, beta, gamma, feas, rng, sa=policy.sa)
+        out = select_topk(alpha, beta, gamma, feas, rng, sa=policy.sa,
+                          assign_perm=assign_perm)
     elif policy.ds == "random":
-        out = select_random(gamma, feas, rng, sa=policy.sa)
+        out = select_random(gamma, feas, rng, sa=policy.sa,
+                            sel_perm=sel_perm, assign_perm=assign_perm)
     elif policy.ds == "cluster":
         if clusters is None:
             raise ValueError("cluster DS needs `clusters`")
-        out = select_cluster(gamma, feas, rng, round_idx, clusters, sa=policy.sa)
+        out = select_cluster(gamma, feas, rng, round_idx, clusters,
+                             sa=policy.sa, assign_perm=assign_perm)
     else:  # fixed
         if fixed_ids is None:
             raise ValueError("fixed DS needs `fixed_ids`")
-        out = select_fixed(gamma, feas, rng, fixed_ids, sa=policy.sa)
+        out = select_fixed(gamma, feas, rng, fixed_ids, sa=policy.sa,
+                           assign_perm=assign_perm)
 
     # ---- assemble per-device quantities on the assigned channels. --------
     tau = np.full(n, np.nan)

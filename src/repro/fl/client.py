@@ -26,6 +26,7 @@ def make_local_trainer(
     batch_size: int,
     local_steps: int,
     loss_per_example: Callable[[Any, jax.Array, jax.Array], jax.Array] | None = None,
+    jit: bool = True,
 ):
     """Build a jitted vmapped local trainer.
 
@@ -35,6 +36,10 @@ def make_local_trainer(
     loss_per_example, when provided, computes the whole minibatch in ONE
     model application (essential for conv models: the vmap fallback runs
     batch-1 forwards, ~50x slower on CPU).
+
+    jit=False returns the raw traceable function instead of a `jax.jit`
+    wrapper — the scan engine (fl.sim) embeds it inside its fused round
+    loop, where an inner jit boundary would only add dispatch overhead.
     """
 
     def masked_loss(params, x, y, m):
@@ -50,14 +55,19 @@ def make_local_trainer(
         # executes a lax.scan of this body ~30x slower than the unrolled
         # form (measured; conv grads inside scan hit a slow path).
         opt_state = opt.init(params)
+        # Minibatches sample only the device's REAL rows (mask prefix), via
+        # floor(u * n_valid): the draw is independent of how far the slot
+        # buffer happens to be padded, so a simulation's trajectory cannot
+        # depend on which other sims share its (group-padded) vmap batch.
+        n_valid = jnp.maximum(mask.sum(), 1.0)
         for k in jax.random.split(key, local_steps):
-            idx = jax.random.randint(k, (batch_size,), 0, x.shape[0])
+            u = jax.random.uniform(k, (batch_size,))
+            idx = (u * n_valid).astype(jnp.int32)    # u < 1 => idx < n_valid
             g = jax.grad(masked_loss)(params, x[idx], y[idx], mask[idx])
             upd, opt_state = opt.update(g, opt_state, params)
             params = apply_updates(params, upd)
         return params
 
-    @jax.jit
     def train_slots(params, x_slots, y_slots, mask_slots, keys):
         # Unrolled over the K slots, NOT vmap/lax.map: XLA-CPU executes both
         # vmapped and scanned conv gradients ~30-400x slower than the plain
@@ -69,4 +79,4 @@ def make_local_trainer(
         ]
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
-    return train_slots
+    return jax.jit(train_slots) if jit else train_slots

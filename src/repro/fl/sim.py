@@ -14,10 +14,26 @@ simulations: all configured runs' horizons are flattened into a single
 solver batch, so planning cost is amortized over seeds/sweeps (Figs. 5-9
 sweep many configs) and the learning plane never waits on the host solver
 mid-run.  DESIGN.md §6.
+
+Two round-loop engines (DESIGN.md §8):
+
+  engine="loop"  -- the host loop: per-round `plan_round` (NumPy leader)
+                    interleaved with jitted training calls;
+  engine="scan"  -- the device-resident loop: the jnp leader plane
+                    (`core.leader_jax`) fused with training inside ONE
+                    `lax.scan` over rounds, and — in `run_many` — `vmap`ped
+                    across the seeds of a sweep so a Fig. 5-9 curve family
+                    is a single compiled program.
+
+Both engines consume identical pre-sampled randomness (`RoundRandomness`
+permutations drawn in `_prepare`), so their transmitted sets, AoU
+trajectories, and latencies coincide exactly; the differential harness
+tests/test_scan_equivalence.py pins this for every RoundPolicy.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Sequence
 
@@ -28,8 +44,10 @@ import numpy as np
 from ..core import (
     RAResult,
     RoundPolicy,
+    RoundRandomness,
     WirelessConfig,
     init_aou,
+    leader_round,
     make_clusters,
     participation_deficit,
     plan_round,
@@ -99,21 +117,34 @@ class SimHistory:
     rounds: np.ndarray
     global_loss: np.ndarray
     accuracy: np.ndarray
-    latency_s: np.ndarray          # per-round latency (eq. 9)
-    cum_time_s: np.ndarray         # convergence time = sum of latencies
+    latency_s: np.ndarray          # per-round latency (eq. 9) at eval rounds
+    cum_time_s: np.ndarray         # convergence time: cumsum over ALL rounds,
+                                   # sampled at eval rounds
     n_selected: np.ndarray
     n_transmitted: np.ndarray
-    energy_j: np.ndarray           # total energy spent per round
+    energy_j: np.ndarray           # total energy spent per round (eval rounds)
     deficits: np.ndarray           # Prop-3 participation deficits
     grad_sq_norms: np.ndarray      # ||grad F||^2 per round (0 if untracked)
     beta: np.ndarray
     wall_s: float
     plan_wall_s: float = 0.0       # control-plane share (Γ precompute)
+    # Full per-round traces (every round, not just eval rounds).  The
+    # differential harness compares these across engines; cum_time_s above
+    # is their cumsum sampled at eval rounds.
+    latency_all: np.ndarray | None = None   # (rounds,)
+    energy_all: np.ndarray | None = None    # (rounds,)
+    tx_trace: np.ndarray | None = None      # (rounds, N) bool
+    age_trace: np.ndarray | None = None     # (rounds, N) post-update AoU
 
 
-def _pad_partition(ds: Dataset, part: FLPartition):
+def _eval_rounds(rounds: int, eval_every: int) -> list[int]:
+    return [t for t in range(rounds)
+            if t % eval_every == 0 or t == rounds - 1]
+
+
+def _pad_partition(ds: Dataset, part: FLPartition, bmax: int | None = None):
     """Pad per-device data to (N, Bmax, ...) + mask for vmapped training."""
-    bmax = int(part.beta.max())
+    bmax = int(part.beta.max()) if bmax is None else bmax
     n = part.n_devices
     x = np.zeros((n, bmax) + ds.x.shape[1:], dtype=ds.x.dtype)
     y = np.zeros((n, bmax), dtype=ds.y.dtype)
@@ -133,6 +164,7 @@ class _Prepared:
     wcfg: WirelessConfig
     rng: np.random.Generator
     ds: Dataset
+    part: FLPartition
     beta: np.ndarray
     x_all: Any
     y_all: Any
@@ -140,6 +172,8 @@ class _Prepared:
     h2_all: np.ndarray             # (rounds, K, N) pre-sampled channel gains
     clusters: np.ndarray
     fixed_ids: np.ndarray
+    sel_perms: np.ndarray          # (rounds, N) injected device permutations
+    assign_perms: np.ndarray       # (rounds, K) injected channel permutations
 
 
 def _prepare(cfg: SimConfig) -> _Prepared:
@@ -161,10 +195,17 @@ def _prepare(cfg: SimConfig) -> _Prepared:
     fixed_ids = rng.permutation(cfg.n_devices)[: cfg.n_subchannels]
     h2_all = np.stack(
         [sample_channel_gains(rng, wcfg, topo) for _ in range(cfg.rounds)])
+    # One randomness stream for BOTH engines (DESIGN.md §8): every round's
+    # leader-plane permutations are drawn here, never inside the loop.
+    sel_perms = np.stack([rng.permutation(cfg.n_devices)
+                          for _ in range(cfg.rounds)])
+    assign_perms = np.stack([rng.permutation(cfg.n_subchannels)
+                             for _ in range(cfg.rounds)])
 
-    return _Prepared(cfg=cfg, wcfg=wcfg, rng=rng, ds=ds, beta=beta,
+    return _Prepared(cfg=cfg, wcfg=wcfg, rng=rng, ds=ds, part=part, beta=beta,
                      x_all=x_all, y_all=y_all, m_all=m_all, h2_all=h2_all,
-                     clusters=clusters, fixed_ids=fixed_ids)
+                     clusters=clusters, fixed_ids=fixed_ids,
+                     sel_perms=sel_perms, assign_perms=assign_perms)
 
 
 def _solve_horizons(
@@ -237,6 +278,10 @@ def _slice_ra(ra: RAResult, t: int) -> RAResult:
                     iterations=ra.iterations[t])
 
 
+# ---------------------------------------------------------------------------
+# engine="loop": the host round loop
+# ---------------------------------------------------------------------------
+
 def _run_prepared(prep: _Prepared, ra_all: RAResult, plan_wall_s: float) -> SimHistory:
     cfg, wcfg, rng, beta = prep.cfg, prep.wcfg, prep.rng, prep.beta
     t_start = time.time()
@@ -264,16 +309,30 @@ def _run_prepared(prep: _Prepared, ra_all: RAResult, plan_wall_s: float) -> SimH
 
     aou = init_aou(cfg.n_devices)
     k_slots = cfg.n_subchannels
+    eval_at = set(_eval_rounds(cfg.rounds, cfg.eval_every))
     hist: dict[str, list] = {k: [] for k in (
-        "round", "loss", "acc", "lat", "nsel", "ntx", "energy", "deficit", "gnorm")}
+        "round", "loss", "acc", "nsel", "ntx", "deficit", "gnorm")}
+    # Per-round traces recorded EVERY round: convergence time (the paper's
+    # headline metric) must accumulate unsampled rounds too, and the
+    # differential harness compares full trajectories across engines.
+    lat_all = np.zeros(cfg.rounds)
+    energy_all = np.zeros(cfg.rounds)
+    tx_trace = np.zeros((cfg.rounds, cfg.n_devices), dtype=bool)
+    age_trace = np.zeros((cfg.rounds, cfg.n_devices), dtype=np.int64)
 
     for t in range(cfg.rounds):
         plan = plan_round(
             aou, beta, prep.h2_all[t], wcfg, rng,
             policy=cfg.policy, round_idx=t, clusters=prep.clusters,
             fixed_ids=prep.fixed_ids, ra=_slice_ra(ra_all, t),
+            randomness=RoundRandomness(sel_perm=prep.sel_perms[t],
+                                       assign_perm=prep.assign_perms[t]),
         )
         aou = plan.aou_next
+        lat_all[t] = plan.latency_s
+        energy_all[t] = float(plan.energy_per_device.sum())
+        tx_trace[t] = plan.transmitted
+        age_trace[t] = aou.age
 
         # ---- learning plane: train the transmitting devices. -------------
         tx_ids = np.where(plan.transmitted)[0]
@@ -292,48 +351,287 @@ def _run_prepared(prep: _Prepared, ra_all: RAResult, plan_wall_s: float) -> SimH
             params = aggregate(params, client_params, jnp.asarray(slot_w))
 
         # ---- bookkeeping ---------------------------------------------------
-        if (t % cfg.eval_every == 0) or (t == cfg.rounds - 1):
+        if t in eval_at:
             hist["round"].append(t)
             hist["loss"].append(float(eval_loss(params, x_full, y_full)))
             hist["acc"].append(float(eval_acc(params, x_full, y_full)))
-            hist["lat"].append(plan.latency_s)
             hist["nsel"].append(int(plan.selected.sum()))
             hist["ntx"].append(int(plan.transmitted.sum()))
-            hist["energy"].append(float(plan.energy_per_device.sum()))
             hist["deficit"].append(participation_deficit(beta, plan.transmitted))
             hist["gnorm"].append(float(grad_norm_sq(params)) if cfg.track_gradnorm else 0.0)
 
-    lat = np.asarray(hist["lat"])
+    ev = np.asarray(hist["round"])
     return SimHistory(
         label=cfg.policy.label,
-        rounds=np.asarray(hist["round"]),
+        rounds=ev,
         global_loss=np.asarray(hist["loss"]),
         accuracy=np.asarray(hist["acc"]),
-        latency_s=lat,
-        cum_time_s=np.cumsum(lat),
+        latency_s=lat_all[ev],
+        cum_time_s=np.cumsum(lat_all)[ev],
         n_selected=np.asarray(hist["nsel"]),
         n_transmitted=np.asarray(hist["ntx"]),
-        energy_j=np.asarray(hist["energy"]),
+        energy_j=energy_all[ev],
         deficits=np.asarray(hist["deficit"]),
         grad_sq_norms=np.asarray(hist["gnorm"]),
         beta=beta,
         wall_s=time.time() - t_start + plan_wall_s,
         plan_wall_s=plan_wall_s,
+        latency_all=lat_all,
+        energy_all=energy_all,
+        tx_trace=tx_trace,
+        age_trace=age_trace,
     )
 
 
+# ---------------------------------------------------------------------------
+# engine="scan": the device-resident round loop (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _scan_inputs(prep: _Prepared, ra: RAResult, bmax: int) -> dict:
+    """Per-seed device arrays consumed by the scanned round loop.
+
+    Leader-plane operands are cast to float32 (the learning plane's dtype);
+    equality of the two engines' decisions survives the cast because every
+    comparison is between continuous channel draws (documented in
+    DESIGN.md §8).  `bmax` pads client data to the group-wide max so seeds
+    stack for vmap.
+    """
+    cfg = prep.cfg
+    if bmax == prep.x_all.shape[1]:        # single-sim / homogeneous group
+        x_all, y_all, m_all = prep.x_all, prep.y_all, prep.m_all
+    else:
+        x_all, y_all, m_all = _pad_partition(prep.ds, prep.part, bmax)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k_init = jax.random.split(key)
+    model = get_small_model(cfg.dataset)
+    return dict(
+        params0=model.init(k_init),
+        key0=key,
+        beta=jnp.asarray(prep.beta, jnp.float32),
+        x_all=x_all, y_all=y_all, m_all=m_all,
+        x_full=jnp.asarray(prep.ds.x), y_full=jnp.asarray(prep.ds.y),
+        clusters=jnp.asarray(prep.clusters, jnp.int32),
+        fixed_ids=jnp.asarray(prep.fixed_ids, jnp.int32),
+        gamma=jnp.asarray(ra.time_s, jnp.float32),
+        feas=jnp.asarray(ra.feasible),
+        energy=jnp.asarray(np.where(np.isfinite(ra.energy_j),
+                                    ra.energy_j, 0.0), jnp.float32),
+        sel_perms=jnp.asarray(prep.sel_perms, jnp.int32),
+        assign_perms=jnp.asarray(prep.assign_perms, jnp.int32),
+    )
+
+
+def _build_scan_runner(cfg: SimConfig, model: SmallModel, trainer):
+    """One fused `lax.scan` over rounds: leader plane + learning plane.
+
+    carry = (params, key, age); xs = per-round Γ slices + injected
+    permutations.  Returns the raw traceable fn(data) -> ys so the caller
+    can `jit` it directly or `jit(vmap(...))` it across stacked seeds.
+    """
+    k, n = cfg.n_subchannels, cfg.n_devices
+    rounds, eval_every = cfg.rounds, cfg.eval_every
+    n_clusters = int(math.ceil(n / k))
+    ndev = jnp.arange(n)
+    kslot = jnp.arange(k)
+    f0 = jnp.float32(0.0)
+
+    def run(data):
+        def gnorm_fn(p):
+            return sum(
+                jnp.sum(jnp.square(g))
+                for g in jax.tree_util.tree_leaves(
+                    jax.grad(model.loss)(p, data["x_full"], data["y_full"])))
+
+        def body(carry, x):
+            params, key, age = carry
+
+            # ---- leader plane (Algorithms 2-3 + AoU), pure jnp ------------
+            lead = leader_round(
+                age, data["beta"], x["gamma"], x["feas"],
+                x["sel_perm"], x["assign_perm"], x["t"],
+                data["clusters"], data["fixed_ids"],
+                ds=cfg.policy.ds, sa=cfg.policy.sa, k=k, n=n,
+                n_clusters=n_clusters)
+            tx = lead["transmitted"]
+            ch_g = jnp.where(tx, lead["channel_of"], 0)
+            t_dev = x["gamma"][ch_g, ndev]
+            latency = jnp.where(
+                tx.any(), jnp.max(jnp.where(tx, t_dev, -jnp.inf)), f0)
+            energy = jnp.sum(jnp.where(tx, x["energy"][ch_g, ndev], f0))
+
+            # ---- learning plane: train the transmitting devices -----------
+            tx_ids = jnp.nonzero(tx, size=k, fill_value=0)[0]
+            cnt = tx.sum()
+            slot_w = jnp.where(kslot < cnt, data["beta"][tx_ids], f0)
+
+            def do_train(ops):
+                p, kk = ops
+                kk, k_round = jax.random.split(kk)
+                keys = jax.random.split(k_round, k)
+                cp = trainer(p, data["x_all"][tx_ids], data["y_all"][tx_ids],
+                             data["m_all"][tx_ids], keys)
+                return aggregate(p, cp, slot_w), kk
+
+            params, key = jax.lax.cond(
+                cnt > 0, do_train, lambda ops: ops, (params, key))
+
+            # ---- bookkeeping: evaluate only at eval rounds ----------------
+            is_eval = x["eval_mask"]
+
+            def ev(p):
+                gn = gnorm_fn(p) if cfg.track_gradnorm else f0
+                return (model.loss(p, data["x_full"], data["y_full"]),
+                        model.accuracy(p, data["x_full"], data["y_full"]),
+                        jnp.float32(gn))
+
+            loss, acc, gnorm = jax.lax.cond(
+                is_eval, ev, lambda p: (f0, f0, f0), params)
+
+            ys = dict(loss=loss, acc=acc, gnorm=gnorm, latency=latency,
+                      energy=energy, selected=lead["selected"],
+                      transmitted=tx, age=lead["age_next"])
+            return (params, key, lead["age_next"]), ys
+
+        # One source of truth for eval rounds: the same helper the history
+        # builders index with (an unbatched xs leaf, so the eval cond stays
+        # a real branch under vmap).
+        eval_mask = np.zeros(rounds, bool)
+        eval_mask[_eval_rounds(rounds, eval_every)] = True
+        xs = dict(gamma=data["gamma"], feas=data["feas"],
+                  energy=data["energy"], sel_perm=data["sel_perms"],
+                  assign_perm=data["assign_perms"],
+                  eval_mask=jnp.asarray(eval_mask),
+                  t=jnp.arange(rounds, dtype=jnp.int32))
+        carry0 = (data["params0"], data["key0"], jnp.ones(n, jnp.int32))
+        _, ys = jax.lax.scan(body, carry0, xs)
+        return ys
+
+    return run
+
+
+def _history_from_scan(cfg: SimConfig, beta: np.ndarray, ys: dict,
+                       wall_s: float, plan_wall_s: float) -> SimHistory:
+    lat_all = np.asarray(ys["latency"], np.float64)
+    energy_all = np.asarray(ys["energy"], np.float64)
+    tx = np.asarray(ys["transmitted"])
+    sel = np.asarray(ys["selected"])
+    age = np.asarray(ys["age"], np.int64)
+    ev = np.asarray(_eval_rounds(cfg.rounds, cfg.eval_every))
+    return SimHistory(
+        label=cfg.policy.label,
+        rounds=ev,
+        global_loss=np.asarray(ys["loss"], np.float64)[ev],
+        accuracy=np.asarray(ys["acc"], np.float64)[ev],
+        latency_s=lat_all[ev],
+        cum_time_s=np.cumsum(lat_all)[ev],
+        n_selected=sel[ev].sum(axis=1),
+        n_transmitted=tx[ev].sum(axis=1),
+        energy_j=energy_all[ev],
+        deficits=np.asarray([participation_deficit(beta, tx[t]) for t in ev]),
+        grad_sq_norms=np.asarray(ys["gnorm"], np.float64)[ev],
+        beta=beta,
+        wall_s=wall_s,
+        plan_wall_s=plan_wall_s,
+        latency_all=lat_all,
+        energy_all=energy_all,
+        tx_trace=tx,
+        age_trace=age,
+    )
+
+
+def _scan_group_key(cfg: SimConfig) -> SimConfig:
+    """Configs identical up to seed/wireless-data fields share one compiled
+    scan program (policy.ra only selects which precomputed Γ is fed in)."""
+    return dataclasses.replace(
+        cfg, seed=0, radius_m=0.0, pt_dbm=0.0, e_max_j=None,
+        policy=dataclasses.replace(cfg.policy, ra="mo"))
+
+
+def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
+                    ras: Sequence[RAResult],
+                    plan_walls: Sequence[float]) -> list[SimHistory]:
+    """Run one static-shape group of simulations through the scan engine,
+    vmapped across seeds when the group has more than one member."""
+    cfg = cfgs[0]
+    t1 = TABLE1[cfg.dataset]
+    model = get_small_model(cfg.dataset)
+    opt = make_optimizer(cfg.optimizer or t1["optimizer"], cfg.lr or t1["lr"])
+    trainer = make_local_trainer(
+        model.loss, opt, batch_size=cfg.batch or t1["batch"],
+        local_steps=cfg.local_steps, loss_per_example=model.loss_per_example,
+        jit=False,
+    )
+    run = _build_scan_runner(cfg, model, trainer)
+
+    # The scan leader ranks float32 age*beta products (core.leader_jax
+    # .priority_order); they are integer-exact — and hence tie/order
+    # identical to the host's f64 ranking — only below 2^24.  Ages are
+    # bounded by rounds + 1.
+    for p in preps:
+        worst = (p.cfg.rounds + 1) * float(p.beta.max())
+        if worst >= 2 ** 24:
+            raise ValueError(
+                f"scan engine: age*beta products may reach {worst:.3g} >= "
+                f"2^24, where float32 priorities lose host equivalence — "
+                f"use engine='loop' or shrink rounds/data sizes")
+
+    t_start = time.time()
+    bmax = max(int(p.part.beta.max()) for p in preps)
+    datas = [_scan_inputs(p, ra, bmax) for p, ra in zip(preps, ras)]
+    if len(datas) == 1:
+        ys = jax.jit(run)(datas[0])
+    else:
+        stacked = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves), *datas)
+        ys = jax.jit(jax.vmap(run))(stacked)
+    jax.block_until_ready(ys)
+    wall_each = (time.time() - t_start) / len(datas)
+
+    out = []
+    for i, (c, p, w) in enumerate(zip(cfgs, preps, plan_walls)):
+        ys_i = ys if len(datas) == 1 else jax.tree_util.tree_map(
+            lambda leaf: leaf[i], ys)
+        out.append(_history_from_scan(c, p.beta, ys_i, wall_each + w, w))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
 def run_many(cfgs: Sequence[SimConfig], *,
-             ra_backend: str | None = None) -> list[SimHistory]:
+             ra_backend: str | None = None,
+             engine: str = "loop") -> list[SimHistory]:
     """Run several simulations, sharing ONE batched whole-horizon Γ solve.
 
     The control-plane cost of a sweep (multiple seeds / radii / budgets,
     Figs. 5-9) collapses into a single device batch; each simulation then
-    replays its precomputed per-round slices through `plan_round`.
+    replays its precomputed per-round slices — through `plan_round` on the
+    host (engine="loop"), or through the fused `lax.scan` round loop
+    (engine="scan"), where configs differing only in seed / wireless data
+    are additionally `vmap`ped into one compiled program (DESIGN.md §8).
     """
+    if engine not in ("loop", "scan"):
+        raise ValueError(f"unknown engine: {engine}")
     preps = [_prepare(c) for c in cfgs]
     ras, plan_walls = _solve_horizons(preps, ra_backend)
-    return [_run_prepared(p, ra, s) for p, ra, s in zip(preps, ras, plan_walls)]
+    if engine == "loop":
+        return [_run_prepared(p, ra, s) for p, ra, s in zip(preps, ras, plan_walls)]
+
+    groups: dict[SimConfig, list[int]] = {}
+    for i, c in enumerate(cfgs):
+        groups.setdefault(_scan_group_key(c), []).append(i)
+    out: list[SimHistory | None] = [None] * len(cfgs)
+    for idx in groups.values():
+        hists = _run_group_scan([cfgs[i] for i in idx],
+                                [preps[i] for i in idx],
+                                [ras[i] for i in idx],
+                                [plan_walls[i] for i in idx])
+        for i, h in zip(idx, hists):
+            out[i] = h
+    return out
 
 
-def run_simulation(cfg: SimConfig) -> SimHistory:
-    return run_many([cfg])[0]
+def run_simulation(cfg: SimConfig, *, ra_backend: str | None = None,
+                   engine: str = "loop") -> SimHistory:
+    return run_many([cfg], ra_backend=ra_backend, engine=engine)[0]

@@ -11,6 +11,9 @@ from repro.models import ShardCtx, forward, init_params, lm_loss, param_count
 from repro.train.optimizer import make_optimizer
 from repro.train.train_step import make_train_step
 
+# Whole-module: one train step per architecture is the long tail of tier-1.
+pytestmark = pytest.mark.slow
+
 ALL = sorted(ARCHS)
 
 

@@ -1,0 +1,125 @@
+"""Property tests for the leader plane's invariants (hypothesis-guarded):
+
+  * AoU (eqs. 6-7): ages >= 1, reset-on-transmit, weights sum to 1 — and the
+    jnp port (`core.leader_jax.step_age`) replays the host state machine
+    exactly;
+  * matching (Definitions 2-3): both host `swap_matching` variants AND the
+    jnp while_loop port terminate two-sided exchange-stable on random
+    feasibility masks, and the port replays the host trajectory exactly —
+    including padded (n_sel < K) buffers.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    aou_weights,
+    init_aou,
+    is_two_sided_exchange_stable,
+    step_age,
+    step_aou,
+    swap_matching,
+    swap_matching_jnp,
+    swap_matching_loop,
+)
+from repro.core.matching import prepare_utility
+
+
+# --------------------------------------------------------------------------
+# AoU invariants (eqs. 6-7)
+# --------------------------------------------------------------------------
+
+@given(n=st.integers(1, 40), rounds=st.integers(1, 25), seed=st.integers(0, 9999))
+def test_aou_invariants_host_and_jnp(n, rounds, seed):
+    rng = np.random.default_rng(seed)
+    host = init_aou(n)
+    age_j = jnp.ones(n, jnp.int32)
+    for _ in range(rounds):
+        tx = rng.uniform(size=n) < 0.4
+        prev = host.age.copy()
+        host = step_aou(host, tx)
+        age_j = step_age(age_j, jnp.asarray(tx))
+        # ages >= 1, reset-on-transmit, +1 otherwise
+        assert np.all(host.age >= 1)
+        assert np.all(host.age[tx] == 1)
+        assert np.all(host.age[~tx] == prev[~tx] + 1)
+        # weights: a distribution, monotone in age
+        w = aou_weights(host)
+        assert w.sum() == pytest.approx(1.0, abs=1e-12)
+        assert np.all(w > 0)
+        # jnp port replays the host state machine exactly
+        np.testing.assert_array_equal(np.asarray(age_j), host.age)
+
+
+# --------------------------------------------------------------------------
+# matching invariants (Definitions 2-3)
+# --------------------------------------------------------------------------
+
+def _instance(rng, k, n_sel, infeasible_frac):
+    gamma = rng.exponential(size=(k, n_sel)) * 5
+    feas = rng.uniform(size=(k, n_sel)) > infeasible_frac
+    return gamma, feas
+
+
+@given(k=st.integers(2, 7), seed=st.integers(0, 10_000),
+       infeasible=st.floats(0.0, 0.9))
+@settings(max_examples=30)
+def test_both_host_variants_terminate_2es(k, seed, infeasible):
+    rng = np.random.default_rng(seed)
+    gamma, feas = _instance(rng, k, k, infeasible)
+    init = np.random.default_rng(seed + 1).permutation(k)
+    gamma_u = prepare_utility(gamma, feas)
+    for fn in (swap_matching, swap_matching_loop):
+        res = fn(gamma, feas, initial=init.copy())
+        assert is_two_sided_exchange_stable(gamma_u, res.assignment)
+        assert len(set(res.assignment.tolist())) == k        # one-to-one
+
+
+@given(k=st.integers(2, 7), n_sel=st.integers(1, 7), seed=st.integers(0, 10_000),
+       infeasible=st.floats(0.0, 0.9))
+@settings(max_examples=40)
+def test_jnp_port_replays_host_and_is_2es(k, n_sel, seed, infeasible):
+    """The fixed-buffer jnp port = the host matching, slot for slot — also
+    when the candidate buffer is padded (n_sel < K)."""
+    n_sel = min(n_sel, k)
+    rng = np.random.default_rng(seed)
+    gamma, feas = _instance(rng, k, n_sel, infeasible)
+    # float32 utilities on both sides: the scan engine feeds the port f32,
+    # and f32 values are exact in the host's f64 comparisons.
+    gamma = gamma.astype(np.float32).astype(np.float64)
+    perm = np.random.default_rng(seed + 1).permutation(k)
+
+    host = swap_matching(gamma, feas, initial=perm[:n_sel].copy())
+
+    # Pad to a K-slot buffer the way core.leader_jax does.
+    gamma_u = prepare_utility(gamma, feas)
+    padded = np.full((k, k), 1e30)
+    padded[:, :n_sel] = gamma_u
+    valid = np.arange(k) < n_sel
+    assignment, feasible, n_swaps, n_rounds = swap_matching_jnp(
+        jnp.asarray(padded, jnp.float32), jnp.asarray(valid),
+        jnp.asarray(perm, jnp.int32))
+
+    np.testing.assert_array_equal(np.asarray(assignment)[:n_sel],
+                                  host.assignment)
+    np.testing.assert_array_equal(np.asarray(feasible)[:n_sel], host.feasible)
+    assert int(n_swaps) == host.n_swaps
+    assert int(n_rounds) == host.n_rounds
+    assert is_two_sided_exchange_stable(gamma_u,
+                                        np.asarray(assignment)[:n_sel])
+
+
+@given(k=st.integers(2, 6), seed=st.integers(0, 10_000))
+@settings(max_examples=20)
+def test_swaps_monotonically_reduce_total_utility(k, seed):
+    """Every executed swap strictly reduces total utility (the paper's
+    convergence argument), so the final sum never exceeds the initial."""
+    rng = np.random.default_rng(seed)
+    gamma, feas = _instance(rng, k, k, 0.3)
+    gamma_u = prepare_utility(gamma, feas)
+    init = rng.permutation(k)
+    res = swap_matching(gamma, feas, initial=init.copy())
+    assert res.utilities.sum() <= gamma_u[init, np.arange(k)].sum() + 1e-9

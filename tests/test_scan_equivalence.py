@@ -1,0 +1,131 @@
+"""Differential harness: the scan engine vs the host round loop.
+
+Both engines consume identical pre-sampled randomness (DESIGN.md §8), so
+for EVERY RoundPolicy (5 DS x 2 RA x 2 SA) they must produce identical
+transmitted-device sets and AoU trajectories, latencies equal up to the
+leader plane's float32 cast, and matched final loss on every dataset.
+
+Set REPRO_DIFF_BACKEND=pallas to run the same suite with Γ solved by the
+interpret-mode Pallas projection backend (CI runs both).
+"""
+import itertools
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import RoundPolicy
+from repro.fl import SimConfig, run_many, run_simulation
+
+RA_BACKEND = os.environ.get("REPRO_DIFF_BACKEND") or None
+
+COMBOS = list(itertools.product(
+    ("alg3", "aou_topk", "random", "cluster", "fixed"),
+    ("mo", "fix"),
+    ("matching", "random"),
+))
+
+_SMALL = dict(rounds=6, n_devices=8, n_subchannels=3, n_samples=96,
+              batch=16, local_steps=2, eval_every=2)
+
+
+def _cfg(dataset="mnist", **kw):
+    base = dict(_SMALL, dataset=dataset)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _assert_equivalent(a, b, *, loss_rtol=1e-3):
+    """The differential contract (DESIGN.md §8)."""
+    np.testing.assert_array_equal(a.tx_trace, b.tx_trace)
+    np.testing.assert_array_equal(a.age_trace, b.age_trace)
+    np.testing.assert_allclose(a.latency_all, b.latency_all,
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(a.energy_all, b.energy_all,
+                               rtol=1e-5, atol=1e-9)
+    np.testing.assert_allclose(a.cum_time_s, b.cum_time_s, rtol=1e-5)
+    np.testing.assert_array_equal(a.n_selected, b.n_selected)
+    np.testing.assert_array_equal(a.n_transmitted, b.n_transmitted)
+    np.testing.assert_allclose(a.deficits, b.deficits, rtol=1e-6)
+    np.testing.assert_allclose(a.global_loss, b.global_loss, rtol=loss_rtol)
+
+
+@pytest.mark.parametrize("ds,ra,sa", COMBOS,
+                         ids=[f"{d}-{r}-{s}" for d, r, s in COMBOS])
+def test_scan_matches_loop_all_policies(ds, ra, sa):
+    cfg = _cfg(policy=RoundPolicy(ds=ds, ra=ra, sa=sa))
+    a = run_simulation(cfg, engine="loop", ra_backend=RA_BACKEND)
+    b = run_simulation(cfg, engine="scan", ra_backend=RA_BACKEND)
+    _assert_equivalent(a, b)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dataset,n,batch", [("cifar10", 64, 8), ("sst2", 96, 16)])
+def test_scan_matches_loop_other_datasets(dataset, n, batch):
+    cfg = _cfg(dataset=dataset, rounds=4, n_samples=n, batch=batch)
+    a = run_simulation(cfg, engine="loop", ra_backend=RA_BACKEND)
+    b = run_simulation(cfg, engine="scan", ra_backend=RA_BACKEND)
+    _assert_equivalent(a, b)
+
+
+@pytest.mark.slow
+def test_scan_vmap_matches_per_seed_and_loop():
+    """run_many's vmapped scan = per-seed scan runs = host loop.  Minibatch
+    sampling is padding-independent (floor(u * n_valid), fl.client), so the
+    group-padded vmap batch cannot perturb a seed's trajectory; only batched
+    XLA kernel reassociation may move the loss, hence the tight rtol."""
+    cfgs = [_cfg(rounds=5, seed=s) for s in (0, 1, 2)]
+    vmapped = run_many(cfgs, engine="scan", ra_backend=RA_BACKEND)
+    solo = [run_simulation(c, engine="scan", ra_backend=RA_BACKEND)
+            for c in cfgs]
+    loop = run_many(cfgs, engine="loop", ra_backend=RA_BACKEND)
+    for v, s, l in zip(vmapped, solo, loop):
+        np.testing.assert_array_equal(v.tx_trace, s.tx_trace)
+        np.testing.assert_array_equal(v.tx_trace, l.tx_trace)
+        np.testing.assert_array_equal(v.age_trace, l.age_trace)
+        np.testing.assert_allclose(v.latency_all, l.latency_all,
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(v.global_loss, s.global_loss, rtol=1e-4)
+        np.testing.assert_allclose(v.global_loss, l.global_loss, rtol=1e-4)
+
+
+def test_scan_mixed_policy_sweep_partitions_into_groups():
+    """A sweep mixing policies still runs (one compiled program per static
+    group) and returns histories in input order."""
+    cfgs = [_cfg(policy=RoundPolicy(ds="alg3"), seed=0),
+            _cfg(policy=RoundPolicy(ds="random"), seed=1),
+            _cfg(policy=RoundPolicy(ds="alg3", ra="fix"), seed=2)]
+    hists = run_many(cfgs, engine="scan", ra_backend=RA_BACKEND)
+    for c, h in zip(cfgs, hists):
+        assert h.label == c.policy.label
+        assert np.isfinite(h.global_loss).all()
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        run_many([_cfg()], engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# history sampling regression (satellite: convergence time must not drop
+# unsampled rounds)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["loop", "scan"])
+def test_cum_time_accumulates_unsampled_rounds(engine):
+    """With eval_every=5, cum_time_s (the paper's convergence-time metric)
+    must still accumulate the latency of EVERY round, not just the sampled
+    ones — the pre-fix behavior silently dropped 4/5 of the rounds."""
+    cfg = _cfg(rounds=10, eval_every=5)
+    h = run_simulation(cfg, engine=engine, ra_backend=RA_BACKEND)
+    assert h.rounds.tolist() == [0, 5, 9]
+    assert h.latency_all.shape == (10,)
+    np.testing.assert_allclose(
+        h.cum_time_s, np.cumsum(h.latency_all)[h.rounds], rtol=1e-12)
+    # Every simulated round has positive latency here, so the fixed metric
+    # is strictly larger than the sum of the sampled latencies alone.
+    assert (h.latency_all > 0).all()
+    assert h.cum_time_s[-1] > h.latency_s.sum()
+    # Sampled-round views stay consistent with the full traces.
+    np.testing.assert_allclose(h.latency_s, h.latency_all[h.rounds])
+    np.testing.assert_allclose(h.energy_j, h.energy_all[h.rounds])

@@ -1,0 +1,102 @@
+"""Algorithm-3 edge cases (core.selection) — branches the main suite never
+hit: all-infeasible Γ, fewer devices than sub-channels, max_iter exhaustion,
+and deterministic tie-breaking of the eq. (43) priority list.
+
+Deliberately hypothesis-free so the whole module runs on minimal installs
+(the property suites skip without hypothesis)."""
+import numpy as np
+import pytest
+
+from repro.core import priority_list, select_aou_alg3, select_topk
+
+
+def _uniform_instance(k, n, feas):
+    gamma = np.ones((k, n))
+    alpha = np.linspace(1.0, 0.1, n)
+    beta = np.ones(n)
+    return alpha, beta, gamma, feas
+
+
+def test_alg3_all_infeasible_gamma():
+    """No feasible pair anywhere: the replacement loop must walk the whole
+    priority list, transmit nobody, and terminate."""
+    k, n = 3, 7
+    alpha, beta, gamma, _ = _uniform_instance(k, n, None)
+    feas = np.zeros((k, n), dtype=bool)
+    out = select_aou_alg3(alpha, beta, gamma, feas, np.random.default_rng(0))
+    assert out.transmitted.sum() == 0
+    assert out.channel_of.tolist() == [-1] * n
+    assert out.selected.sum() == k          # a candidate set was still formed
+    assert 1 <= out.iterations <= n         # terminated, list exhausted
+    # Every device entered the candidate buffer at some point: the last
+    # batch is whatever remained when Q ran dry.
+    assert np.all(out.selected[out.selected_ids])
+
+
+def test_alg3_fewer_devices_than_subchannels():
+    """n < K: the candidate buffer shrinks to n and matching still works."""
+    k, n = 5, 3
+    alpha, beta, gamma, _ = _uniform_instance(k, n, None)
+    feas = np.ones((k, n), dtype=bool)
+    out = select_aou_alg3(alpha, beta, gamma, feas, np.random.default_rng(0))
+    assert out.selected.sum() == n
+    assert out.transmitted.sum() == n
+    ch = out.channel_of[out.transmitted]
+    assert len(set(ch.tolist())) == n       # distinct sub-channels
+    assert out.iterations == 1              # nothing to replace
+
+
+def test_alg3_max_iter_exhaustion():
+    """max_iter=1 freezes the first candidate set even though replacements
+    could have fixed the infeasible slot."""
+    alpha = np.array([1.0, 0.5, 0.4, 0.3])
+    beta = np.ones(4)
+    gamma = np.ones((2, 4))
+    feas = np.array([[False, True, True, True],
+                     [False, True, True, True]])
+    limited = select_aou_alg3(alpha, beta, gamma, feas,
+                              np.random.default_rng(0), max_iter=1)
+    assert limited.iterations == 1
+    assert not limited.transmitted[0]
+    assert limited.transmitted.sum() == 1   # only the feasible top-2 member
+    free = select_aou_alg3(alpha, beta, gamma, feas, np.random.default_rng(0))
+    assert free.iterations > 1
+    assert free.transmitted.sum() == 2      # replacement rescued the slot
+
+
+def test_alg3_stops_when_priority_list_exhausted():
+    """Replacements stop the moment Q runs dry mid-iteration."""
+    k, n = 2, 3
+    alpha, beta, gamma, _ = _uniform_instance(k, n, None)
+    feas = np.array([[True, False, False],
+                     [True, False, False]])
+    out = select_aou_alg3(alpha, beta, gamma, feas, np.random.default_rng(0))
+    assert out.transmitted.sum() == 1
+    assert out.iterations <= n
+
+
+def test_priority_ties_broken_by_device_id():
+    """Exact alpha*beta ties order by device id (stable sort), and scaling
+    alpha by a positive constant — the eq. (7) normalizer — cannot reorder
+    anything."""
+    alpha = np.array([2.0, 1.0, 2.0, 1.0])
+    beta = np.array([3.0, 6.0, 3.0, 6.0])   # all products == 6
+    assert priority_list(alpha, beta).tolist() == [0, 1, 2, 3]
+    alpha2 = np.array([4.0, 5.0, 5.0, 4.0])
+    beta2 = np.array([5.0, 4.0, 4.0, 5.0])  # all products == 20
+    assert priority_list(alpha2, beta2).tolist() == [0, 1, 2, 3]
+    # Distinct priorities: any positive rescaling preserves the order.
+    a = np.array([7.0, 2.0, 9.0, 4.0])
+    b = np.array([3.0, 5.0, 1.0, 8.0])
+    np.testing.assert_array_equal(priority_list(a, b),
+                                  priority_list(a * 0.125, b))
+
+
+def test_topk_vs_alg3_on_tied_priorities():
+    """With every priority tied, top-K must take the K lowest device ids."""
+    k, n = 3, 6
+    alpha, beta, gamma, _ = _uniform_instance(k, n, None)
+    alpha = np.ones(n)
+    feas = np.ones((k, n), dtype=bool)
+    out = select_topk(alpha, beta, gamma, feas, np.random.default_rng(0))
+    assert sorted(out.selected_ids.tolist()) == [0, 1, 2]

@@ -6,6 +6,9 @@ import pytest
 from repro.core import RoundPolicy, WirelessConfig
 from repro.fl import SimConfig, run_many, run_simulation
 
+# Whole-module: multi-policy end-to-end simulations, the slow tier-1 half.
+pytestmark = pytest.mark.slow
+
 
 def test_proposed_scheme_beats_fixed_ds():
     """Fig. 3's clearest ordering: Fixed-DS (least data) loses to Alg. 3."""
