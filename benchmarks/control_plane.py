@@ -12,7 +12,13 @@ the perf trajectory is machine-readable across PRs.  Acceptance rows:
   * `run_many/scan` — an 8-seed sweep through the scan+vmap engine must be
     >= 3x faster wall-clock than the host round loop (best of
     SWEEP_REPS runs per engine; FIX-RA keeps Algorithm 1 — measured by the
-    horizon row, identical work for both engines — out of this one).
+    horizon row, identical work for both engines — out of this one);
+  * `sweep/grid8` — an 8-config policy x seed grid (the experiment
+    harness's workload, DESIGN.md §10) through ONE grouped run_many scan
+    dispatch must be >= 2x faster than the equivalent loop of solo
+    `run_simulation(engine="scan")` calls (the grid compiles one
+    lax.switch program and shares worlds/Γ across policy variants; the
+    solo loop pays per-call compilation and preparation).
 """
 from __future__ import annotations
 
@@ -30,7 +36,7 @@ from repro.core import (
     solve_pairs,
     solve_pairs_jit,
 )
-from repro.fl import SimConfig, run_many
+from repro.fl import SimConfig, run_many, run_simulation
 
 from .common import emit
 
@@ -42,6 +48,12 @@ SWEEP_SEEDS = 8
 SWEEP_REPS = 3
 SWEEP_CFG = dict(dataset="mnist", rounds=100, n_devices=64, n_subchannels=16,
                  n_samples=128, batch=16, eval_every=20, local_steps=1)
+
+GRID_DS = ("alg3", "random", "fixed", "cluster")
+GRID_SEEDS = 2
+GRID_REPS = 2
+GRID_CFG = dict(dataset="mnist", rounds=60, n_devices=20, n_subchannels=4,
+                n_samples=128, batch=16, eval_every=20, local_steps=1)
 
 
 def _setup(n, rounds, seed=0):
@@ -136,6 +148,37 @@ def run(json_path: str | None = None):
         "loop_s_all": times["loop"], "scan_s_all": times["scan"],
         "speedup": sweep_speedup, "tx_traces_agree": bool(tx_agree),
         "target_speedup": 3.0, "meets_target": bool(sweep_speedup >= 3.0),
+    }
+
+    # ---- acceptance: 8-config policy x seed grid vs solo-call loop --------
+    grid = [SimConfig(seed=s, policy=RoundPolicy(ds=d, ra="fix"), **GRID_CFG)
+            for d in GRID_DS for s in range(GRID_SEEDS)]
+    t_grid, t_solo = [], []
+    grid_hists = solo_hists = None
+    for _ in range(GRID_REPS):
+        t0 = time.time()
+        grid_hists = run_many(grid, engine="scan")
+        t_grid.append(time.time() - t0)
+        t0 = time.time()
+        solo_hists = [run_simulation(c, engine="scan") for c in grid]
+        t_solo.append(time.time() - t0)
+    grid_agree = all(
+        np.array_equal(a.tx_trace, b.tx_trace)
+        and np.array_equal(a.global_loss, b.global_loss)
+        for a, b in zip(grid_hists, solo_hists))
+    tg, ts = min(t_grid), min(t_solo)
+    grid_speedup = ts / tg
+    rows.append([f"sweep/solo_loop/{len(grid)}cfg", round(ts * 1e6, 1),
+                 f"{GRID_CFG['rounds']} rounds, N={GRID_CFG['n_devices']}"])
+    rows.append([f"sweep/grid/{len(grid)}cfg", round(tg * 1e6, 1),
+                 f"{grid_speedup:.1f}x, agree={grid_agree}"])
+    record["sweep_grid"] = {
+        "policies": list(GRID_DS), "seeds": GRID_SEEDS, "reps": GRID_REPS,
+        **GRID_CFG,
+        "solo_loop_s": ts, "grid_s": tg,
+        "solo_loop_s_all": t_solo, "grid_s_all": t_grid,
+        "speedup": grid_speedup, "results_agree": bool(grid_agree),
+        "target_speedup": 2.0, "meets_target": bool(grid_speedup >= 2.0),
     }
 
     emit("control_plane", ["us_per_call", "derived"], rows)

@@ -9,8 +9,12 @@ Control-plane algorithms (all vectorized, run server-side between rounds):
   aou           -- Age-of-Update state, eqs. 6-7
   selection     -- Algorithm 3 (+ benchmark schemes)
   leader_jax    -- Algorithms 2-3 + AoU as pure jnp (scan-engine leader)
-  stackelberg   -- per-round game orchestration
+  stackelberg   -- per-round game orchestration + policy grids
   convergence   -- Proposition 3 bound
+
+Everything re-exported here is public API with a stable signature; the
+sweep harness (`repro.experiments`) and the simulation engines (`repro.fl`)
+build exclusively on this surface.
 """
 from .aou import AoUState, aou_weights, init_aou, step_aou
 from .convergence import convergence_bound, participation_deficit
@@ -42,11 +46,16 @@ from .selection import (
     select_topk,
 )
 from .stackelberg import (
+    DS_SCHEMES,
+    PAPER_BASELINE_DS,
+    RA_SCHEMES,
+    SA_SCHEMES,
     RoundPlan,
     RoundPolicy,
     RoundRandomness,
     make_clusters,
     plan_round,
+    policy_grid,
 )
 from .wireless import (
     Topology,
@@ -62,4 +71,31 @@ from .wireless import (
     total_time,
 )
 
-__all__ = [n for n in dir() if not n.startswith("_")]
+__all__ = [
+    # aou (eqs. 6-7)
+    "AoUState", "init_aou", "step_aou", "aou_weights",
+    # convergence (Proposition 3)
+    "convergence_bound", "participation_deficit",
+    # feasibility (Proposition 1)
+    "feasible_mask", "is_infeasible", "min_comm_energy",
+    # matching (Algorithm 2)
+    "U_MAX", "MatchResult", "swap_matching", "swap_matching_loop",
+    "random_assignment", "is_two_sided_exchange_stable",
+    # leader_jax (scan-engine leader plane)
+    "leader_round", "prepare_utility_jnp", "priority_order", "step_age",
+    "swap_matching_jnp",
+    # monotonic / monotonic_jax (Algorithm 1)
+    "RAResult", "solve_pairs", "fixed_ra", "grid_oracle",
+    "solve_pairs_jit", "precompute_gamma",
+    # selection (Algorithm 3 + Sec.-VI benchmark schemes)
+    "SelectionOutcome", "priority_list", "select_aou_alg3", "select_topk",
+    "select_random", "select_cluster", "select_fixed",
+    # stackelberg (round orchestration + policy grids)
+    "RoundPolicy", "RoundPlan", "RoundRandomness", "plan_round",
+    "make_clusters", "policy_grid",
+    "DS_SCHEMES", "RA_SCHEMES", "SA_SCHEMES", "PAPER_BASELINE_DS",
+    # wireless (system model, eqs. 1-10)
+    "Topology", "WirelessConfig", "sample_topology", "sample_channel_gains",
+    "comm_rate", "comm_time", "comm_energy", "compute_time",
+    "compute_energy", "total_time", "total_energy",
+]

@@ -15,6 +15,11 @@ __all__ = ["AoUState", "init_aou", "step_aou", "aou_weights"]
 
 @dataclasses.dataclass
 class AoUState:
+    """Age-of-Update state: per-device rounds since last update (eq. 6).
+
+    `age[n]` is A_n >= 1; `weights` exposes the normalized alpha_n of
+    eq. (7) used by the eq.-43 selection priority."""
+
     age: np.ndarray  # (N,) int64, A_n >= 1
 
     @property
@@ -40,4 +45,5 @@ def step_aou(state: AoUState, transmitted: np.ndarray) -> AoUState:
 
 
 def aou_weights(state: AoUState) -> np.ndarray:
+    """Normalized AoU weights alpha_n = A_n / sum_i A_i (eq. 7)."""
     return state.weights

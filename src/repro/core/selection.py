@@ -29,6 +29,9 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class SelectionOutcome:
+    """One device-selection decision: the leader's set S_n plus the
+    predicted follower matching over it (Algorithm 3 / Sec.-VI schemes)."""
+
     selected: np.ndarray          # (N,) bool, S_n
     channel_of: np.ndarray        # (N,) int, assigned sub-channel or -1
     transmitted: np.ndarray       # (N,) bool, S_n * sum_k psi_kn == 1 AND feasible

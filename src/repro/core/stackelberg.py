@@ -37,7 +37,16 @@ from .selection import (
 from .wireless import WirelessConfig
 
 __all__ = ["RoundPolicy", "RoundPlan", "RoundRandomness", "plan_round",
-           "make_clusters"]
+           "make_clusters", "policy_grid", "DS_SCHEMES", "RA_SCHEMES",
+           "SA_SCHEMES", "PAPER_BASELINE_DS"]
+
+# The scheme axes of Sec. VI (RoundPolicy validates against these).
+DS_SCHEMES = ("alg3", "aou_topk", "random", "cluster", "fixed")
+RA_SCHEMES = ("mo", "fix")
+SA_SCHEMES = ("matching", "random")
+# The paper's headline comparison (Fig. 3): the proposed Algorithm 3 vs the
+# Sec.-VI device-selection baselines.
+PAPER_BASELINE_DS = ("alg3", "random", "fixed", "cluster")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,16 +67,20 @@ class RoundRandomness:
 
 @dataclasses.dataclass(frozen=True)
 class RoundPolicy:
+    """One Sec.-VI scheme combination: device selection x resource
+    allocation x sub-channel assignment (see module docstring for the
+    axes; `policy_grid` builds Cartesian grids of these)."""
+
     ds: str = "alg3"        # device selection scheme
     ra: str = "mo"          # resource allocation scheme
     sa: str = "matching"    # sub-channel assignment scheme
 
     def __post_init__(self):
-        if self.ds not in ("alg3", "aou_topk", "random", "cluster", "fixed"):
+        if self.ds not in DS_SCHEMES:
             raise ValueError(f"unknown ds: {self.ds}")
-        if self.ra not in ("mo", "fix"):
+        if self.ra not in RA_SCHEMES:
             raise ValueError(f"unknown ra: {self.ra}")
-        if self.sa not in ("matching", "random"):
+        if self.sa not in SA_SCHEMES:
             raise ValueError(f"unknown sa: {self.sa}")
 
     @property
@@ -94,6 +107,28 @@ class RoundPlan:
     outcome: SelectionOutcome
     gamma: np.ndarray          # (K, N) min-time matrix (Algorithm 1 output)
     feasible: np.ndarray       # (K, N) Proposition-1 mask
+
+
+def policy_grid(
+    ds: str | tuple[str, ...] = ("alg3",),
+    ra: str | tuple[str, ...] = ("mo",),
+    sa: str | tuple[str, ...] = ("matching",),
+) -> list[RoundPolicy]:
+    """Cartesian grid of `RoundPolicy` over the Sec.-VI scheme axes.
+
+    Axes accept a single scheme name or a tuple of names; the grid is
+    ds-major, then ra, then sa — the ordering the sweep harness
+    (`repro.experiments`) uses for stable cell ids.  Each policy is
+    validated by `RoundPolicy.__post_init__`.
+
+    >>> [p.ds for p in policy_grid(ds=("alg3", "random"))]
+    ['alg3', 'random']
+    """
+    ds_t = (ds,) if isinstance(ds, str) else tuple(ds)
+    ra_t = (ra,) if isinstance(ra, str) else tuple(ra)
+    sa_t = (sa,) if isinstance(sa, str) else tuple(sa)
+    return [RoundPolicy(ds=d, ra=r, sa=s)
+            for d in ds_t for r in ra_t for s in sa_t]
 
 
 def make_clusters(n_devices: int, k: int, rng: np.random.Generator) -> np.ndarray:

@@ -173,8 +173,12 @@ def comm_energy(p, h2, cfg: WirelessConfig):
 # --------------------------------------------------------------------------
 
 def total_time(tau, p, beta, h2, cfg: WirelessConfig):
+    """Per-round device time T = T^cp + T^cm (eq. 8): local compute at CPU
+    share tau plus uplink at power fraction p over channel gain h2."""
     return compute_time(tau, beta, cfg) + comm_time(p, h2, cfg)
 
 
 def total_energy(tau, p, beta, h2, cfg: WirelessConfig):
+    """Per-round device energy E = E^cp + E^cm (eq. 10), the Prop.-1 /
+    Alg.-1 budget constraint left-hand side (E <= E^max)."""
     return compute_energy(tau, beta, cfg) + comm_energy(p, h2, cfg)

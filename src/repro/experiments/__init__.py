@@ -1,0 +1,52 @@
+"""Paper-figure experiment harness: declarative policy x seed sweeps.
+
+Public surface:
+  SweepSpec / SweepCell -- declarative grids over the Sec.-VI comparison
+                           axes (policies, datasets, N/K, seeds), expanded
+                           to `SimConfig` cells with stable artifact ids;
+  run_sweep / SweepResult -- dispatch a spec through the vmapped/sharded
+                           scan engine and derive the paper metrics;
+  metrics                -- rounds/time-to-target-loss, sub-channel
+                           utilization, cumulative latency;
+  store                  -- versioned JSON artifacts under ``results/``;
+  figures / render_gallery -- SVG convergence curves, utilization bars,
+                           and latency CDFs rendered from artifacts.
+
+See DESIGN.md §10 and ``examples/reproduce_figures.py`` for the
+end-to-end reproduction entry point.
+"""
+from .metrics import (
+    cumulative_latency_s,
+    mean_subchannel_utilization,
+    per_round_utilization,
+    rounds_to_target,
+    summarize_cell,
+    time_to_target_s,
+)
+from .figures import Facet, POLICY_COLORS, POLICY_NAMES, facets, render_gallery
+from .runner import SweepResult, group_mean_curves, run_sweep
+from .spec import SweepCell, SweepSpec
+from .store import latest_dir, load_latest, load_record, write_record
+
+__all__ = [
+    "SweepSpec",
+    "SweepCell",
+    "SweepResult",
+    "run_sweep",
+    "group_mean_curves",
+    "rounds_to_target",
+    "time_to_target_s",
+    "mean_subchannel_utilization",
+    "per_round_utilization",
+    "cumulative_latency_s",
+    "summarize_cell",
+    "latest_dir",
+    "load_latest",
+    "load_record",
+    "write_record",
+    "POLICY_COLORS",
+    "POLICY_NAMES",
+    "Facet",
+    "facets",
+    "render_gallery",
+]

@@ -1,0 +1,168 @@
+"""Paper-figure renderers over sweep artifacts (no matplotlib required).
+
+Reads the versioned ``sweep.json`` record (never live histories), so every
+figure in the gallery can be regenerated from a committed artifact alone:
+
+  * convergence curves — global loss vs round and vs simulated time
+    (Fig. 3 / Fig. 5 style), seed-averaged per device-selection policy;
+  * sub-channel utilization bars — mean fraction of the K uplink slots
+    used per round (the Fig. 7 resource story);
+  * per-round latency CDF — the eq.-9 latency distribution each policy
+    induces (the denominator of convergence *time*).
+
+Cells are FACETED before averaging: one figure set per distinct
+(dataset, N, K, ra, sa) combination, so a sweep that crosses resource
+allocation, assignment, or network-size axes renders small multiples
+instead of silently pooling heterogeneous configs into one curve.  Only
+seeds are averaged within a series.
+
+Colors follow the policy ENTITY, never its rank: each ds scheme owns a
+fixed slot of the validated categorical palette (order blue, orange, aqua,
+yellow, magenta — adjacent-pair CVD-safe; see the dataviz palette notes),
+so adding or filtering policies never repaints the survivors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+
+from .svg import Series, bar_chart, line_chart
+
+__all__ = ["POLICY_COLORS", "POLICY_NAMES", "Facet", "facets",
+           "render_gallery", "fig_convergence", "fig_utilization",
+           "fig_latency_cdf"]
+
+# Fixed entity -> categorical-slot assignment (light-mode steps).
+POLICY_COLORS = {
+    "alg3": "#2a78d6",      # slot 1, blue   — the proposed scheme
+    "random": "#eb6834",    # slot 2, orange
+    "fixed": "#1baf7a",     # slot 3, aqua
+    "cluster": "#eda100",   # slot 4, yellow
+    "aou_topk": "#e87ba4",  # slot 5, magenta
+}
+POLICY_NAMES = {
+    "alg3": "Alg. 3 (proposed)",
+    "random": "Random DS",
+    "fixed": "Fixed DS",
+    "cluster": "Cluster DS",
+    "aou_topk": "AoU top-K DS",
+}
+# Stable legend/bar order: proposed first, then the Sec.-VI baselines.
+_DS_ORDER = list(POLICY_COLORS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Facet:
+    """One homogeneous slice of a record: everything but ds scheme and
+    seed is fixed, so seed-averaging within it is meaningful."""
+
+    dataset: str
+    n_devices: int
+    n_subchannels: int
+    ra: str
+    sa: str
+    suffix: str    # filename suffix ("mnist", "mnist-N40-K8-fix.random", ...)
+
+    def matches(self, cell: dict) -> bool:
+        return (cell["dataset"] == self.dataset
+                and cell["n_devices"] == self.n_devices
+                and cell["n_subchannels"] == self.n_subchannels
+                and cell["policy"]["ra"] == self.ra
+                and cell["policy"]["sa"] == self.sa)
+
+
+def facets(record: dict) -> list[Facet]:
+    """Distinct (dataset, N, K, ra, sa) slices, with minimal suffixes:
+    shape/scheme parts appear only when the record actually varies them."""
+    keys = sorted({(c["dataset"], c["n_devices"], c["n_subchannels"],
+                    c["policy"]["ra"], c["policy"]["sa"])
+                   for c in record["cells"]})
+    many_shapes = len({(d, n, k) for d, n, k, _, _ in keys}) > len(
+        {d for d, *_ in keys})
+    many_schemes = len({(r, s) for *_, r, s in keys}) > 1
+    out = []
+    for d, n, k, r, s in keys:
+        suffix = d
+        if many_shapes:
+            suffix += f"-N{n}-K{k}"
+        if many_schemes:
+            suffix += f"-{r}.{s}"
+        out.append(Facet(d, n, k, r, s, suffix))
+    return out
+
+
+def _by_ds(record: dict, facet: Facet) -> dict[str, list[dict]]:
+    """The facet's cells grouped by ds scheme, in `_DS_ORDER`."""
+    groups: dict[str, list[dict]] = {}
+    for c in record["cells"]:
+        if facet.matches(c):
+            groups.setdefault(c["policy"]["ds"], []).append(c)
+    return {ds: groups[ds] for ds in _DS_ORDER if ds in groups}
+
+
+def _seed_mean(cells: list[dict], section: str, key: str) -> np.ndarray:
+    return np.mean([np.asarray(c[section][key], float) for c in cells],
+                   axis=0)
+
+
+def fig_convergence(record: dict, facet: Facet, out_dir: Path,
+                    x_axis: str = "round") -> Path:
+    """Seed-averaged global-loss curves per policy (vs round or sim time)."""
+    series = []
+    for ds, cells in _by_ds(record, facet).items():
+        y = _seed_mean(cells, "curves", "global_loss")
+        x = (np.asarray(cells[0]["curves"]["round"], float) if x_axis == "round"
+             else _seed_mean(cells, "curves", "cum_time_s"))
+        series.append(Series(POLICY_NAMES[ds], x, y, POLICY_COLORS[ds]))
+    xlabel = ("communication round" if x_axis == "round"
+              else "simulated time (s, eq. 9 cumulative)")
+    suffix = "rounds" if x_axis == "round" else "time"
+    return line_chart(
+        series, out_dir / f"convergence_{suffix}_{facet.suffix}.svg",
+        title=f"Global loss vs {xlabel.split(' (')[0]} — {facet.suffix}",
+        xlabel=xlabel, ylabel="global loss F(w)")
+
+
+def fig_utilization(record: dict, facet: Facet, out_dir: Path) -> Path:
+    """Mean sub-channel utilization per policy (seed-averaged)."""
+    labels, values, colors = [], [], []
+    for ds, cells in _by_ds(record, facet).items():
+        labels.append(POLICY_NAMES[ds])
+        values.append(float(np.mean(
+            [c["metrics"]["mean_subchannel_utilization"] for c in cells])))
+        colors.append(POLICY_COLORS[ds])
+    return bar_chart(
+        labels, values, colors, out_dir / f"utilization_{facet.suffix}.svg",
+        title=f"Mean sub-channel utilization — {facet.suffix}",
+        ylabel="fraction of K sub-channels used",
+        value_fmt=lambda v: f"{v:.2f}")
+
+
+def fig_latency_cdf(record: dict, facet: Facet, out_dir: Path) -> Path:
+    """Empirical CDF of per-round latency, pooled over rounds and seeds."""
+    series = []
+    for ds, cells in _by_ds(record, facet).items():
+        lat = np.sort(np.concatenate(
+            [np.asarray(c["trace"]["latency_s"], float) for c in cells]))
+        cdf = np.arange(1, lat.size + 1) / lat.size
+        series.append(Series(POLICY_NAMES[ds], lat, cdf,
+                             POLICY_COLORS[ds], step=True))
+    return line_chart(
+        series, out_dir / f"latency_cdf_{facet.suffix}.svg",
+        title=f"Per-round latency CDF — {facet.suffix}",
+        xlabel="round latency (s, eq. 9)",
+        ylabel="P(latency ≤ x)", ylim=(0.0, 1.04))
+
+
+def render_gallery(record: dict, out_dir: str | Path) -> list[Path]:
+    """All figures for every facet of a record; returns written paths."""
+    out_dir = Path(out_dir)
+    paths = []
+    for facet in facets(record):
+        paths.append(fig_convergence(record, facet, out_dir, "round"))
+        paths.append(fig_convergence(record, facet, out_dir, "time"))
+        paths.append(fig_utilization(record, facet, out_dir))
+        paths.append(fig_latency_cdf(record, facet, out_dir))
+    return paths

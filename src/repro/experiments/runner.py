@@ -1,0 +1,171 @@
+"""Sweep execution: expand a `SweepSpec`, dispatch through the scan engine,
+derive paper metrics, and persist a versioned artifact.
+
+`run_sweep` is a thin deterministic shell around `fl.run_many`: all the
+heavy lifting — world/Γ sharing across policy-only variants, grouping
+same-shape cells into one compiled `lax.scan` program, policy batching via
+`lax.switch`, and sharding the cell batch across local devices — lives in
+the engine (DESIGN.md §10).  The runner's own contract is that cell
+results are IDENTICAL to solo `run_simulation` calls (pinned by
+tests/test_sweep.py), so an artifact is exactly "the paper run N times",
+never a subtly different batched variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import platform
+import time
+from pathlib import Path
+from typing import Sequence
+
+import jax
+
+from ..fl.sim import SimHistory, run_many
+from .metrics import per_round_utilization, summarize_cell
+from .spec import SweepCell, SweepSpec
+from .store import next_version_dir, write_record
+
+__all__ = ["SweepResult", "run_sweep"]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """A finished sweep: the JSON-ready record plus in-memory histories."""
+
+    spec: SweepSpec
+    record: dict
+    histories: list[SimHistory]
+    cells: list[SweepCell]
+    out_dir: Path | None = None
+
+    def cell(self, cell_id: str) -> dict:
+        for c in self.record["cells"]:
+            if c["id"] == cell_id:
+                return c
+        raise KeyError(cell_id)
+
+
+def _cell_record(cell: SweepCell, hist: SimHistory,
+                 target_loss: float | None) -> dict:
+    cfg = cell.config
+    lat_all = (hist.latency_all if hist.latency_all is not None
+               else hist.latency_s)
+    util = per_round_utilization(hist, cfg.n_subchannels)
+    return {
+        "id": cell.cell_id,
+        "dataset": cfg.dataset,
+        "n_devices": cfg.n_devices,
+        "n_subchannels": cfg.n_subchannels,
+        "seed": cfg.seed,
+        "policy": {"ds": cfg.policy.ds, "ra": cfg.policy.ra,
+                   "sa": cfg.policy.sa, "label": cfg.policy.label},
+        "metrics": summarize_cell(cfg, hist, target_loss),
+        "curves": {
+            "round": [int(r) for r in hist.rounds],
+            "global_loss": [float(v) for v in hist.global_loss],
+            "accuracy": [float(v) for v in hist.accuracy],
+            "cum_time_s": [float(v) for v in hist.cum_time_s],
+        },
+        "trace": {
+            "latency_s": [float(v) for v in lat_all],
+            "utilization": [float(v) for v in util],
+        },
+    }
+
+
+def run_sweep(spec: SweepSpec, *,
+              engine: str = "scan",
+              shard: bool | None = None,
+              ra_backend: str | None = None,
+              results_root: str | Path = "results",
+              write: bool = True,
+              figures: bool = False) -> SweepResult:
+    """Run every cell of `spec` and (optionally) persist the artifact.
+
+    Args:
+      spec: the declarative grid to run.
+      engine: `fl.run_many` round-loop engine; "scan" (default) batches
+        same-shape policy x seed cells into single compiled programs.
+      shard: passed to `run_many` — None auto-shards the cell batch across
+        local devices when more than one is visible.
+      ra_backend: Γ-solver projection backend override.
+      results_root: artifact root; each call writes a NEW
+        ``<root>/<spec.name>/v####/`` version (see `experiments.store`).
+      write: set False to skip artifact I/O (returns the record in memory).
+      figures: also render the SVG gallery into ``<version>/figures/``.
+
+    Returns a `SweepResult`; ``result.record`` is the JSON artifact.
+    """
+    cells = spec.cells()
+    t0 = time.time()
+    hists = run_many([c.config for c in cells], engine=engine,
+                     shard=shard, ra_backend=ra_backend)
+    wall_s = time.time() - t0
+
+    record = {
+        "schema": 1,
+        "sweep": spec.to_json(),
+        "engine": engine,
+        "n_cells": len(cells),
+        "wall_s": wall_s,
+        "env": {
+            "host": platform.machine(),
+            "jax_backend": jax.default_backend(),
+            "local_devices": jax.local_device_count(),
+        },
+        "cells": [_cell_record(c, h, spec.target_loss)
+                  for c, h in zip(cells, hists)],
+    }
+
+    result = SweepResult(spec=spec, record=record, histories=list(hists),
+                         cells=cells)
+    if write:
+        out_dir = next_version_dir(results_root, spec.name)
+        write_record(record, out_dir)
+        result.out_dir = out_dir
+        if figures:
+            from .figures import render_gallery
+            render_gallery(record, out_dir / "figures")
+    return result
+
+
+def group_mean_curves(record: dict, *, dataset: str | None = None,
+                      n_devices: int | None = None,
+                      n_subchannels: int | None = None,
+                      key: str = "global_loss") -> dict[str, tuple]:
+    """Average a per-cell eval curve over SEEDS, per policy label.
+
+    Returns {policy_label: (rounds, mean_curve)} for cells matching the
+    given dataset / N / K (each None = the record's only value; raises if
+    the record varies an unfiltered axis, so heterogeneous configs are
+    never silently pooled into one curve).  The label is the full
+    ds+ra+sa scheme name, so distinct policies never merge either.
+    """
+    cells = record["cells"]
+
+    def resolve(name, value, getter):
+        values = sorted({getter(c) for c in cells})
+        if value is None:
+            if len(values) > 1:
+                raise ValueError(
+                    f"record spans {name}={values}; pass {name}= to pick one")
+            return values[0]
+        return value
+
+    dataset = resolve("dataset", dataset, lambda c: c["dataset"])
+    n_devices = resolve("n_devices", n_devices, lambda c: c["n_devices"])
+    n_subchannels = resolve("n_subchannels", n_subchannels,
+                            lambda c: c["n_subchannels"])
+    by_label: dict[str, list] = {}
+    rounds_by_label: dict[str, Sequence[int]] = {}
+    for c in cells:
+        if (c["dataset"], c["n_devices"], c["n_subchannels"]) != (
+                dataset, n_devices, n_subchannels):
+            continue
+        lab = c["policy"]["label"]
+        by_label.setdefault(lab, []).append(c["curves"][key])
+        rounds_by_label[lab] = c["curves"]["round"]
+    import numpy as np
+    return {lab: (rounds_by_label[lab],
+                  np.mean(np.asarray(v, float), axis=0))
+            for lab, v in by_label.items()}

@@ -1,0 +1,142 @@
+"""Declarative sweep specifications over the simulation grid.
+
+A `SweepSpec` names a Cartesian grid over the paper's comparison axes —
+device-selection / resource-allocation / sub-channel-assignment schemes
+(Sec. VI policies), datasets, network sizes (N, K), and seeds — and expands
+it into concrete `SimConfig` cells with stable, path-safe ids.  The
+expansion order is fixed (dataset-major, then (N, K), then the
+`core.policy_grid` policy order, then seed) so cell ids and artifact
+layouts are reproducible across runs and machines.
+
+The spec is deliberately *declarative*: it never runs anything.  The
+runner (`repro.experiments.runner`) feeds the expanded cells through
+`fl.run_many(engine="scan")`, which shares worlds/Γ solves across
+policy-only variants and batches same-shape cells into single compiled
+programs (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Sequence
+
+from ..core.stackelberg import RoundPolicy, policy_grid
+from ..fl.sim import SimConfig
+
+__all__ = ["SweepSpec", "SweepCell"]
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+# SimConfig fields a spec may override beyond the grid axes.
+_OVERRIDABLE = frozenset(
+    f.name for f in dataclasses.fields(SimConfig)
+    if f.name not in ("dataset", "n_devices", "n_subchannels", "seed",
+                      "policy", "rounds"))
+
+
+def _axis(v) -> tuple:
+    """Normalize a grid axis: scalars become 1-tuples, sequences tuples."""
+    if isinstance(v, (str, int, float)) or v is None:
+        return (v,)
+    return tuple(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One expanded grid point: a stable id plus its concrete `SimConfig`."""
+
+    cell_id: str
+    index: int
+    config: SimConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A named Cartesian grid over the paper's comparison axes.
+
+    Args:
+      name: artifact-directory name (``results/<name>/v####/``); must be
+        path-safe (letters, digits, ``._-``).
+      datasets: Table-I dataset names ("mnist" / "cifar10" / "sst2").
+      ds / ra / sa: policy scheme axes, crossed via `core.policy_grid`
+        (eq. 42-43 selection, Algorithm-1 vs FIX RA, Algorithm-2 vs R-SA).
+      n_devices / n_subchannels: network-size axes (N, K), crossed.
+      seeds: world seeds; cells differing only in policy share one sampled
+        world and one Γ solve (`fl.run_many` dedups them).
+      rounds: communication rounds per cell (scalar — part of the compiled
+        scan shape, so it is not a grid axis).
+      target_loss: global-loss threshold used by the derived
+        rounds-to-target / time-to-target metrics (None disables them).
+      overrides: extra `SimConfig` fields applied to every cell, as a
+        mapping or ``((field, value), ...)`` pairs — e.g.
+        ``{"n_samples": 256, "eval_every": 5}``.
+    """
+
+    name: str
+    datasets: Sequence[str] = ("mnist",)
+    ds: Sequence[str] = ("alg3",)
+    ra: Sequence[str] = ("mo",)
+    sa: Sequence[str] = ("matching",)
+    n_devices: Sequence[int] = (20,)
+    n_subchannels: Sequence[int] = (4,)
+    seeds: Sequence[int] = (0,)
+    rounds: int = 100
+    target_loss: float | None = None
+    overrides: Any = ()
+
+    def __post_init__(self):
+        if not _NAME_RE.match(self.name):
+            raise ValueError(f"sweep name not path-safe: {self.name!r}")
+        for field in ("datasets", "ds", "ra", "sa", "n_devices",
+                      "n_subchannels", "seeds"):
+            object.__setattr__(self, field, _axis(getattr(self, field)))
+        ov = self.overrides
+        ov = tuple(sorted(ov.items())) if isinstance(ov, dict) else tuple(
+            (str(k), v) for k, v in ov)
+        unknown = [k for k, _ in ov if k not in _OVERRIDABLE]
+        if unknown:
+            raise ValueError(
+                f"overrides reference non-overridable/unknown SimConfig "
+                f"fields: {unknown} (allowed: {sorted(_OVERRIDABLE)})")
+        object.__setattr__(self, "overrides", ov)
+        self.policies  # validate scheme names eagerly
+
+    @property
+    def policies(self) -> list[RoundPolicy]:
+        """The policy axis expanded in `core.policy_grid` order."""
+        return policy_grid(ds=tuple(self.ds), ra=tuple(self.ra),
+                           sa=tuple(self.sa))
+
+    @property
+    def n_cells(self) -> int:
+        return (len(self.datasets) * len(self.n_devices)
+                * len(self.n_subchannels) * len(self.policies)
+                * len(self.seeds))
+
+    def cells(self) -> list[SweepCell]:
+        """Expand the grid: dataset > (N, K) > policy > seed, stable ids."""
+        out: list[SweepCell] = []
+        ov = dict(self.overrides)
+        for dataset in self.datasets:
+            for n in self.n_devices:
+                for k in self.n_subchannels:
+                    for pol in self.policies:
+                        for seed in self.seeds:
+                            cfg = SimConfig(
+                                dataset=dataset, n_devices=n,
+                                n_subchannels=k, rounds=self.rounds,
+                                policy=pol, seed=seed, **ov)
+                            cid = (f"{dataset}-N{n}-K{k}-"
+                                   f"{pol.ds}.{pol.ra}.{pol.sa}-s{seed}")
+                            out.append(SweepCell(cid, len(out), cfg))
+        return out
+
+    def to_json(self) -> dict:
+        """JSON-serializable form (round-trips through `from_json`)."""
+        d = dataclasses.asdict(self)
+        d["overrides"] = dict(self.overrides)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SweepSpec":
+        return cls(**d)

@@ -1,8 +1,26 @@
 """Federated-learning substrate: clients, server aggregation (eq. 34), and
-the end-to-end FLOWN simulation harness."""
+the end-to-end FLOWN simulation harness.
+
+Public surface:
+  make_local_trainer   -- jitted K-slot local-step trainer (eq. 33);
+  aggregate            -- selection-masked weighted FedAvg (eq. 34);
+  masked_weighted_mean -- its zero-weight-safe weighted-mean primitive;
+  SimConfig / SimHistory / run_simulation / run_many
+                       -- the single-cell Sec.-VI simulation harness with
+                          its two round-loop engines (host loop vs fused
+                          `lax.scan`; DESIGN.md §8, §10);
+  TABLE1               -- the paper's Table-I per-dataset settings;
+  HierSimConfig / run_hierarchical
+                       -- the multi-cell (two-tier FedAvg) extension,
+                          same engine matrix.
+
+Sweeps over this surface (policy x seed grids, artifacts, figures) live
+in `repro.experiments`.
+"""
 from .client import make_local_trainer
 from .server import aggregate, masked_weighted_mean
 from .sim import SimConfig, SimHistory, TABLE1, run_many, run_simulation
+from .hierarchical import HierSimConfig, run_hierarchical
 
 __all__ = [
     "make_local_trainer",
@@ -13,7 +31,6 @@ __all__ = [
     "TABLE1",
     "run_simulation",
     "run_many",
+    "HierSimConfig",
+    "run_hierarchical",
 ]
-from .hierarchical import HierSimConfig, run_hierarchical  # noqa: E402
-
-__all__ += ["HierSimConfig", "run_hierarchical"]

@@ -13,10 +13,27 @@ This is exactly what the multi-pod train_step computes when the gradient
 all-reduce crosses the `pod` axis with fl_weights set per cohort — this
 module provides the simulation-plane counterpart so cell-level scheduling
 policies can be compared end-to-end.
+
+Like the single-cell harness (`fl.sim`), the multi-cell loop pre-samples
+every cell's whole channel horizon and leader permutations up front,
+solves Γ for all cells in one batched Algorithm-1 call, and offers the
+same two engines (DESIGN.md §8, §10):
+
+  engine="loop"  -- host round loop: per-cell `plan_round` + jitted training;
+  engine="scan"  -- ONE `lax.scan` over rounds whose body unrolls the
+                    (static) cell list: per-cell jnp leader + training +
+                    the inter-cell aggregation, fused into a single
+                    compiled program.
+
+Both engines consume identical pre-sampled randomness, so their per-cell
+transmitted sets, latencies, and losses coincide (differential test:
+tests/test_hierarchical.py::test_hierarchical_engine_equivalence).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 
 import jax
 import jax.numpy as jnp
@@ -24,24 +41,36 @@ import numpy as np
 
 from ..core import (
     RoundPolicy,
+    RoundRandomness,
     WirelessConfig,
     init_aou,
+    leader_round,
+    make_clusters,
     plan_round,
     sample_channel_gains,
     sample_topology,
+    solve_pairs_jit,
 )
+from ..core.monotonic import RAResult, fixed_ra
 from ..data.fl_datasets import make_dataset, partition_imbalanced_iid
 from ..models.small import get_small_model
 from ..train.optimizer import make_optimizer
 from .client import make_local_trainer
 from .server import aggregate
-from .sim import TABLE1
+from .sim import TABLE1, _pad_partition, _slice_ra
 
 __all__ = ["HierSimConfig", "run_hierarchical"]
 
 
 @dataclasses.dataclass(frozen=True)
 class HierSimConfig:
+    """Multi-cell simulation settings (one Stackelberg game per cell).
+
+    `n_cells` base stations each serve `devices_per_cell` devices over
+    `subchannels_per_cell` uplink sub-channels; all cells share the global
+    model and the Table-I learning settings of `dataset`.
+    """
+
     dataset: str = "mnist"
     n_cells: int = 2
     devices_per_cell: int = 10
@@ -53,64 +82,153 @@ class HierSimConfig:
     local_steps: int = 3
 
 
-def run_hierarchical(cfg: HierSimConfig) -> dict:
-    """Two-tier FedAvg: per-cell Stackelberg rounds + inter-cell aggregation."""
+@dataclasses.dataclass
+class _HierPrepared:
+    """Per-cell worlds + whole-horizon Γ, sampled before the round loop."""
+
+    ds: object
+    beta: np.ndarray          # (C, N)
+    x: object                 # (C, N, Bmax, ...) padded client data
+    y: object
+    m: object
+    clusters: np.ndarray      # (C, N)
+    fixed_ids: np.ndarray     # (C, S)
+    h2_all: np.ndarray        # (C, rounds, K, N)
+    sel_perms: np.ndarray     # (C, rounds, N)
+    assign_perms: np.ndarray  # (C, rounds, K)
+    ras: list[RAResult]       # per cell, fields (rounds, K, N)
+    wcfg: WirelessConfig
+    rng: np.random.Generator
+
+
+def _prepare_hier(cfg: HierSimConfig, ra_backend: str | None) -> _HierPrepared:
     rng = np.random.default_rng(cfg.seed)
     t1 = TABLE1[cfg.dataset]
     ds = make_dataset(cfg.dataset, rng, n=cfg.n_samples)
+    n, k = cfg.devices_per_cell, cfg.subchannels_per_cell
+    wcfg = WirelessConfig(n_devices=n, n_subchannels=k,
+                          model_bits=t1["model_bits"], e_max_j=t1["e_max"])
+
+    beta, xs, ys_, ms, clusters, fixed_ids, topos = [], [], [], [], [], [], []
+    bmax = 0
+    parts = []
+    for _ in range(cfg.n_cells):
+        part = partition_imbalanced_iid(rng, ds.n, n)
+        parts.append(part)
+        bmax = max(bmax, int(part.beta.max()))
+        topos.append(sample_topology(rng, wcfg))
+        clusters.append(make_clusters(n, k, rng))
+        fixed_ids.append(rng.permutation(n)[: min(k, n)])
+    for part in parts:
+        beta.append(part.beta.astype(np.float64))
+        x, y, m = _pad_partition(ds, part, bmax)
+        xs.append(x); ys_.append(y); ms.append(m)
+
+    h2_all = np.stack([
+        np.stack([sample_channel_gains(rng, wcfg, topo)
+                  for _ in range(cfg.rounds)])
+        for topo in topos])
+    sel_perms = np.stack([
+        np.stack([rng.permutation(n) for _ in range(cfg.rounds)])
+        for _ in range(cfg.n_cells)])
+    assign_perms = np.stack([
+        np.stack([rng.permutation(k) for _ in range(cfg.rounds)])
+        for _ in range(cfg.n_cells)])
+
+    beta = np.stack(beta)
+    if cfg.policy.ra == "mo":
+        # One batched Algorithm-1 call over every (cell, round, k, n) pair.
+        flat = solve_pairs_jit(
+            np.broadcast_to(beta[:, None, None, :], h2_all.shape).reshape(-1),
+            h2_all.reshape(-1), wcfg, backend=ra_backend)
+        shp = h2_all.shape[1:]
+        sz = int(np.prod(shp))
+        ras = [RAResult(*(getattr(flat, f.name)[c * sz:(c + 1) * sz]
+                          .reshape(shp) for f in dataclasses.fields(RAResult)))
+               for c in range(cfg.n_cells)]
+    else:
+        ras = [fixed_ra(beta[c][None, None, :], h2_all[c], wcfg)
+               for c in range(cfg.n_cells)]
+
+    return _HierPrepared(
+        ds=ds, beta=beta,
+        x=jnp.stack(xs), y=jnp.stack(ys_), m=jnp.stack(ms),
+        clusters=np.stack(clusters), fixed_ids=np.stack(fixed_ids),
+        h2_all=h2_all, sel_perms=sel_perms, assign_perms=assign_perms,
+        ras=ras, wcfg=wcfg, rng=rng)
+
+
+def run_hierarchical(cfg: HierSimConfig, *, engine: str = "loop",
+                     ra_backend: str | None = None) -> dict:
+    """Two-tier FedAvg: per-cell Stackelberg rounds + inter-cell aggregation.
+
+    Args:
+      cfg: multi-cell settings; `cfg.policy` applies to every cell.
+      engine: "loop" (host round loop) or "scan" (one fused `lax.scan`
+        over rounds with the cell list unrolled in its body).  Both
+        consume identical pre-sampled randomness and agree on per-cell
+        transmitted sets and losses (DESIGN.md §10).
+      ra_backend: Γ-solver projection backend override.
+
+    Returns {"loss": (rounds,), "latency": (rounds,),
+             "tx": (rounds, n_cells, N) bool, "wall_s": float}.
+    """
+    if engine not in ("loop", "scan"):
+        raise ValueError(f"unknown engine: {engine}")
+    t_start = time.time()
+    prep = _prepare_hier(cfg, ra_backend)
+    t1 = TABLE1[cfg.dataset]
     model = get_small_model(cfg.dataset)
     key = jax.random.PRNGKey(cfg.seed)
     key, k0 = jax.random.split(key)
     params = model.init(k0)
     opt = make_optimizer(t1["optimizer"], t1["lr"])
-    trainer = make_local_trainer(model.loss, opt, batch_size=t1["batch"],
-                                 local_steps=cfg.local_steps,
-                                 loss_per_example=model.loss_per_example)
+    x_full, y_full = jnp.asarray(prep.ds.x), jnp.asarray(prep.ds.y)
+
+    if engine == "scan":
+        trainer = make_local_trainer(
+            model.loss, opt, batch_size=t1["batch"],
+            local_steps=cfg.local_steps,
+            loss_per_example=model.loss_per_example, jit=False)
+        out = _run_hier_scan(cfg, prep, model, trainer, params, key,
+                             x_full, y_full)
+        out["wall_s"] = time.time() - t_start
+        return out
+
+    trainer = make_local_trainer(
+        model.loss, opt, batch_size=t1["batch"], local_steps=cfg.local_steps,
+        loss_per_example=model.loss_per_example)
     eval_loss = jax.jit(model.loss)
-    x_full, y_full = jnp.asarray(ds.x), jnp.asarray(ds.y)
-
-    # Per-cell wireless worlds + data partitions.
-    from .sim import _pad_partition
-
-    cells = []
-    for c in range(cfg.n_cells):
-        wcfg = WirelessConfig(
-            n_devices=cfg.devices_per_cell,
-            n_subchannels=cfg.subchannels_per_cell,
-            model_bits=t1["model_bits"], e_max_j=t1["e_max"],
-        )
-        part = partition_imbalanced_iid(rng, ds.n, cfg.devices_per_cell)
-        x, y, m = _pad_partition(ds, part)
-        cells.append({
-            "wcfg": wcfg,
-            "topo": sample_topology(rng, wcfg),
-            "aou": init_aou(cfg.devices_per_cell),
-            "beta": part.beta.astype(np.float64),
-            "x": x, "y": y, "m": m,
-        })
-
-    losses, latencies = [], []
+    aous = [init_aou(cfg.devices_per_cell) for _ in range(cfg.n_cells)]
     k_slots = cfg.subchannels_per_cell
+    losses, latencies = [], []
+    tx_trace = np.zeros((cfg.rounds, cfg.n_cells, cfg.devices_per_cell), bool)
     for t in range(cfg.rounds):
         cell_params, cell_weights, round_lat = [], [], 0.0
-        for cell in cells:
-            h2 = sample_channel_gains(rng, cell["wcfg"], cell["topo"])
-            plan = plan_round(cell["aou"], cell["beta"], h2, cell["wcfg"],
-                              rng, policy=cfg.policy, round_idx=t)
-            cell["aou"] = plan.aou_next
+        for c in range(cfg.n_cells):
+            plan = plan_round(
+                aous[c], prep.beta[c], prep.h2_all[c][t], prep.wcfg,
+                prep.rng, policy=cfg.policy, round_idx=t,
+                clusters=prep.clusters[c], fixed_ids=prep.fixed_ids[c],
+                ra=_slice_ra(prep.ras[c], t),
+                randomness=RoundRandomness(sel_perm=prep.sel_perms[c][t],
+                                           assign_perm=prep.assign_perms[c][t]))
+            aous[c] = plan.aou_next
             round_lat = max(round_lat, plan.latency_s)  # cells run in parallel
+            tx_trace[t, c] = plan.transmitted
             tx = np.where(plan.transmitted)[0]
             slot_ids = np.zeros(k_slots, dtype=np.int64)
             slot_w = np.zeros(k_slots, dtype=np.float32)
             slot_ids[: len(tx)] = tx
-            slot_w[: len(tx)] = cell["beta"][tx]
+            slot_w[: len(tx)] = prep.beta[c][tx]
             if len(tx):
-                key_l, key = jax.random.split(key)[0], jax.random.split(key)[1]
-                keys = jax.random.split(key_l, k_slots)
-                client = trainer(params, cell["x"][slot_ids], cell["y"][slot_ids],
-                                 cell["m"][slot_ids], keys)
-                w_cell = aggregate(params, client, jnp.asarray(slot_w))
-                cell_params.append(w_cell)
+                key, k_cell = jax.random.split(key)
+                keys = jax.random.split(k_cell, k_slots)
+                client = trainer(params, prep.x[c][slot_ids],
+                                 prep.y[c][slot_ids], prep.m[c][slot_ids],
+                                 keys)
+                cell_params.append(aggregate(params, client,
+                                             jnp.asarray(slot_w)))
                 cell_weights.append(float(slot_w.sum()))
         if cell_params:
             stacked = jax.tree_util.tree_map(
@@ -119,4 +237,83 @@ def run_hierarchical(cfg: HierSimConfig) -> dict:
                                jnp.asarray(cell_weights, jnp.float32))
         losses.append(float(eval_loss(params, x_full, y_full)))
         latencies.append(round_lat)
-    return {"loss": np.asarray(losses), "latency": np.asarray(latencies)}
+    return {"loss": np.asarray(losses), "latency": np.asarray(latencies),
+            "tx": tx_trace, "wall_s": time.time() - t_start}
+
+
+def _run_hier_scan(cfg: HierSimConfig, prep: _HierPrepared, model, trainer,
+                   params0, key0, x_full, y_full) -> dict:
+    """The fused multi-cell round loop: one `lax.scan`, cells unrolled."""
+    n, k = cfg.devices_per_cell, cfg.subchannels_per_cell
+    n_cells = cfg.n_cells
+    n_clusters = int(math.ceil(n / k))
+    ndev = jnp.arange(n)
+    kslot = jnp.arange(k)
+    f0 = jnp.float32(0.0)
+    pol = cfg.policy
+
+    data = dict(
+        beta=jnp.asarray(prep.beta, jnp.float32),
+        x=prep.x, y=prep.y, m=prep.m,
+        clusters=jnp.asarray(prep.clusters, jnp.int32),
+        fixed_ids=jnp.asarray(prep.fixed_ids, jnp.int32),
+    )
+    xs = dict(
+        gamma=jnp.asarray(np.stack([ra.time_s for ra in prep.ras], 1),
+                          jnp.float32),                     # (rounds, C, K, N)
+        feas=jnp.asarray(np.stack([ra.feasible for ra in prep.ras], 1)),
+        sel_perm=jnp.asarray(prep.sel_perms.swapaxes(0, 1), jnp.int32),
+        assign_perm=jnp.asarray(prep.assign_perms.swapaxes(0, 1), jnp.int32),
+        t=jnp.arange(cfg.rounds, dtype=jnp.int32),
+    )
+
+    def body(carry, x):
+        params, key, age = carry                            # age (C, N)
+        cell_out, weights, ages = [], [], []
+        latency = f0
+        tx_all = []
+        for c in range(n_cells):
+            lead = leader_round(
+                age[c], data["beta"][c], x["gamma"][c], x["feas"][c],
+                x["sel_perm"][c], x["assign_perm"][c], x["t"],
+                data["clusters"][c], data["fixed_ids"][c],
+                ds=pol.ds, sa=pol.sa, k=k, n=n, n_clusters=n_clusters)
+            tx = lead["transmitted"]
+            ch_g = jnp.where(tx, lead["channel_of"], 0)
+            t_dev = x["gamma"][c][ch_g, ndev]
+            cell_lat = jnp.where(
+                tx.any(), jnp.max(jnp.where(tx, t_dev, -jnp.inf)), f0)
+            latency = jnp.maximum(latency, cell_lat)
+            tx_ids = jnp.nonzero(tx, size=k, fill_value=0)[0]
+            cnt = tx.sum()
+            slot_w = jnp.where(kslot < cnt, data["beta"][c][tx_ids], f0)
+
+            def do_train(ops, c=c, tx_ids=tx_ids, slot_w=slot_w):
+                p, kk = ops
+                kk, k_cell = jax.random.split(kk)
+                keys = jax.random.split(k_cell, k)
+                cp = trainer(p, data["x"][c][tx_ids], data["y"][c][tx_ids],
+                             data["m"][c][tx_ids], keys)
+                return aggregate(p, cp, slot_w), kk
+
+            w_cell, key = jax.lax.cond(
+                cnt > 0, do_train, lambda ops: ops, (params, key))
+            cell_out.append(w_cell)
+            weights.append(slot_w.sum())
+            ages.append(lead["age_next"])
+            tx_all.append(tx)
+
+        stacked = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves), *cell_out)
+        params = aggregate(params, stacked, jnp.stack(weights))
+        loss = model.loss(params, x_full, y_full)
+        ys = dict(loss=loss, latency=latency, tx=jnp.stack(tx_all))
+        return (params, key, jnp.stack(ages)), ys
+
+    carry0 = (params0, key0, jnp.ones((n_cells, n), jnp.int32))
+    _, ys = jax.jit(
+        lambda c0, xs_: jax.lax.scan(body, c0, xs_))(carry0, xs)
+    jax.block_until_ready(ys)
+    return {"loss": np.asarray(ys["loss"], np.float64),
+            "latency": np.asarray(ys["latency"], np.float64),
+            "tx": np.asarray(ys["tx"])}

@@ -29,6 +29,16 @@ Both engines consume identical pre-sampled randomness (`RoundRandomness`
 permutations drawn in `_prepare`), so their transmitted sets, AoU
 trajectories, and latencies coincide exactly; the differential harness
 tests/test_scan_equivalence.py pins this for every RoundPolicy.
+
+Sweep extensions (DESIGN.md §10): configs that differ only in
+`policy.ds`/`policy.sa` share ONE `_Prepared` world (same seed => same
+data/topology/channels) and ONE whole-horizon Γ solve, and the scan engine
+batches them into a single compiled program — `leader_round` branches become
+a `lax.switch` on a per-element policy index, so a policy x seed grid is one
+XLA program with a (policy x seed) batch axis.  When more than one local
+device is visible, that batch axis is sharded across devices via
+`shard_map` (`run_many(..., shard=...)`); on one device it stays a `vmap`.
+The declarative front-end over this path lives in `repro.experiments`.
 """
 from __future__ import annotations
 
@@ -80,6 +90,10 @@ TABLE1 = {
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
+    """One Sec.-VI simulation: dataset + network size + scheme policy +
+    seed (Table-I learning settings default per dataset; override fields
+    are None = "use Table I")."""
+
     dataset: str = "mnist"
     n_devices: int = 20
     n_subchannels: int = 4
@@ -113,6 +127,11 @@ class SimConfig:
 
 @dataclasses.dataclass
 class SimHistory:
+    """One finished simulation's trajectory: eval-round curves (loss,
+    accuracy, eq.-9 latency, cumulative convergence time) plus full
+    per-round traces (`*_all`, `tx_trace`, `age_trace`) used by the
+    differential harness and the sweep metrics."""
+
     label: str
     rounds: np.ndarray
     global_loss: np.ndarray
@@ -219,9 +238,24 @@ def _solve_horizons(
     are a closed form, evaluated per config.  Returns the per-sim RAResults
     and each sim's share of planning wall time (group time split
     proportionally to its pair count).
+
+    Sims sharing a `_Prepared` world (policy-only variants deduped by
+    `run_many`) and the same `policy.ra` have identical Γ by construction:
+    they are solved ONCE and the duplicates alias the representative's
+    RAResult (read-only downstream), at zero attributed planning time.
     """
     out: list[RAResult | None] = [None] * len(preps)
     secs = [0.0] * len(preps)
+
+    # Γ dedup: channel horizon identity (shared _Prepared) + RA scheme.
+    dup_of: list[int | None] = [None] * len(preps)
+    rep_idx: dict[tuple[int, str], int] = {}
+    for i, p in enumerate(preps):
+        key = (id(p.h2_all), p.cfg.policy.ra)
+        if key in rep_idx:
+            dup_of[i] = rep_idx[key]
+        else:
+            rep_idx[key] = i
 
     # The solver is elementwise over pairs with e_max as a per-element
     # operand, but the remaining wireless constants (model_bits, P_t, B,
@@ -232,7 +266,7 @@ def _solve_horizons(
 
     groups: dict[WirelessConfig, list[int]] = {}
     for i, p in enumerate(preps):
-        if p.cfg.policy.ra == "mo":
+        if p.cfg.policy.ra == "mo" and dup_of[i] is None:
             groups.setdefault(solver_key(p.wcfg), []).append(i)
 
     for mo in groups.values():
@@ -265,10 +299,13 @@ def _solve_horizons(
             off += sz
 
     for i, p in enumerate(preps):
-        if out[i] is None:
+        if out[i] is None and dup_of[i] is None:
             t0 = time.time()
             out[i] = fixed_ra(p.beta[None, None, :], p.h2_all, p.wcfg)
             secs[i] = time.time() - t0
+    for i, rep in enumerate(dup_of):
+        if rep is not None:
+            out[i] = out[rep]
     return out, secs
 
 
@@ -387,14 +424,16 @@ def _run_prepared(prep: _Prepared, ra_all: RAResult, plan_wall_s: float) -> SimH
 # engine="scan": the device-resident round loop (DESIGN.md §8)
 # ---------------------------------------------------------------------------
 
-def _scan_inputs(prep: _Prepared, ra: RAResult, bmax: int) -> dict:
-    """Per-seed device arrays consumed by the scanned round loop.
+def _scan_inputs(prep: _Prepared, ra: RAResult, bmax: int,
+                 policy_idx: int = 0) -> dict:
+    """Per-cell device arrays consumed by the scanned round loop.
 
     Leader-plane operands are cast to float32 (the learning plane's dtype);
     equality of the two engines' decisions survives the cast because every
     comparison is between continuous channel draws (documented in
-    DESIGN.md §8).  `bmax` pads client data to the group-wide max so seeds
-    stack for vmap.
+    DESIGN.md §8).  `bmax` pads client data to the group-wide max so cells
+    stack for vmap; `policy_idx` selects this cell's leader branch in the
+    runner's `lax.switch` (0 for single-policy groups).
     """
     cfg = prep.cfg
     if bmax == prep.x_all.shape[1]:        # single-sim / homogeneous group
@@ -406,6 +445,7 @@ def _scan_inputs(prep: _Prepared, ra: RAResult, bmax: int) -> dict:
     model = get_small_model(cfg.dataset)
     return dict(
         params0=model.init(k_init),
+        policy_idx=jnp.int32(policy_idx),
         key0=key,
         beta=jnp.asarray(prep.beta, jnp.float32),
         x_all=x_all, y_all=y_all, m_all=m_all,
@@ -421,12 +461,20 @@ def _scan_inputs(prep: _Prepared, ra: RAResult, bmax: int) -> dict:
     )
 
 
-def _build_scan_runner(cfg: SimConfig, model: SmallModel, trainer):
+def _build_scan_runner(cfg: SimConfig, model: SmallModel, trainer,
+                       policies: Sequence[tuple[str, str]] | None = None):
     """One fused `lax.scan` over rounds: leader plane + learning plane.
 
     carry = (params, key, age); xs = per-round Γ slices + injected
     permutations.  Returns the raw traceable fn(data) -> ys so the caller
-    can `jit` it directly or `jit(vmap(...))` it across stacked seeds.
+    can `jit` it directly or `jit(vmap(...))` it across stacked cells.
+
+    `policies` lists the distinct (ds, sa) leader variants of the group; a
+    multi-policy group dispatches on `data["policy_idx"]` through
+    `lax.switch`, so one compiled program covers a whole policy x seed grid
+    (under `vmap` the switch lowers to a select — every branch runs on the
+    batch, which is cheap next to the training plane and buys one XLA
+    compilation instead of one per policy; DESIGN.md §10).
     """
     k, n = cfg.n_subchannels, cfg.n_devices
     rounds, eval_every = cfg.rounds, cfg.eval_every
@@ -434,6 +482,8 @@ def _build_scan_runner(cfg: SimConfig, model: SmallModel, trainer):
     ndev = jnp.arange(n)
     kslot = jnp.arange(k)
     f0 = jnp.float32(0.0)
+    if policies is None:
+        policies = [(cfg.policy.ds, cfg.policy.sa)]
 
     def run(data):
         def gnorm_fn(p):
@@ -442,16 +492,26 @@ def _build_scan_runner(cfg: SimConfig, model: SmallModel, trainer):
                 for g in jax.tree_util.tree_leaves(
                     jax.grad(model.loss)(p, data["x_full"], data["y_full"])))
 
+        def leader_branch(ds, sa):
+            def branch(ops):
+                age, x = ops
+                return leader_round(
+                    age, data["beta"], x["gamma"], x["feas"],
+                    x["sel_perm"], x["assign_perm"], x["t"],
+                    data["clusters"], data["fixed_ids"],
+                    ds=ds, sa=sa, k=k, n=n, n_clusters=n_clusters)
+            return branch
+
+        branches = [leader_branch(ds, sa) for ds, sa in policies]
+
         def body(carry, x):
             params, key, age = carry
 
             # ---- leader plane (Algorithms 2-3 + AoU), pure jnp ------------
-            lead = leader_round(
-                age, data["beta"], x["gamma"], x["feas"],
-                x["sel_perm"], x["assign_perm"], x["t"],
-                data["clusters"], data["fixed_ids"],
-                ds=cfg.policy.ds, sa=cfg.policy.sa, k=k, n=n,
-                n_clusters=n_clusters)
+            if len(branches) == 1:
+                lead = branches[0]((age, x))
+            else:
+                lead = jax.lax.switch(data["policy_idx"], branches, (age, x))
             tx = lead["transmitted"]
             ch_g = jnp.where(tx, lead["channel_of"], 0)
             t_dev = x["gamma"][ch_g, ndev]
@@ -540,18 +600,36 @@ def _history_from_scan(cfg: SimConfig, beta: np.ndarray, ys: dict,
 
 
 def _scan_group_key(cfg: SimConfig) -> SimConfig:
-    """Configs identical up to seed/wireless-data fields share one compiled
-    scan program (policy.ra only selects which precomputed Γ is fed in)."""
+    """Configs identical up to seed/wireless-data/policy fields share one
+    compiled scan program: policy.ra only selects which precomputed Γ is fed
+    in, and policy.ds/sa select a `lax.switch` leader branch inside the
+    shared program (DESIGN.md §10)."""
     return dataclasses.replace(
         cfg, seed=0, radius_m=0.0, pt_dbm=0.0, e_max_j=None,
-        policy=dataclasses.replace(cfg.policy, ra="mo"))
+        policy=RoundPolicy())
+
+
+def _prep_key(cfg: SimConfig) -> SimConfig:
+    """Configs identical up to the policy sample the same `_Prepared` world:
+    dataset, partition, topology, channel horizon, and injected permutations
+    are all drawn from `seed` before the policy is ever consulted."""
+    return dataclasses.replace(cfg, policy=RoundPolicy())
 
 
 def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
-                    ras: Sequence[RAResult],
-                    plan_walls: Sequence[float]) -> list[SimHistory]:
-    """Run one static-shape group of simulations through the scan engine,
-    vmapped across seeds when the group has more than one member."""
+                    ras: Sequence[RAResult], plan_walls: Sequence[float],
+                    shard: bool = False) -> list[SimHistory]:
+    """Run one static-shape group of simulations through the scan engine.
+
+    Members differing in seed/wireless data/policy stack into one batch:
+    a single `jit(vmap(run))` program (distinct ds/sa pairs become
+    `lax.switch` branches selected per batch element).  With `shard=True`
+    and more than one visible local device, the batch axis is additionally
+    sharded across devices via `shard_map` — the batch is padded to a
+    device-count multiple by repeating cell 0 and the pad rows are dropped
+    from the histories (per-cell programs are independent, so padding
+    cannot perturb real cells).
+    """
     cfg = cfgs[0]
     t1 = TABLE1[cfg.dataset]
     model = get_small_model(cfg.dataset)
@@ -561,7 +639,15 @@ def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
         local_steps=cfg.local_steps, loss_per_example=model.loss_per_example,
         jit=False,
     )
-    run = _build_scan_runner(cfg, model, trainer)
+    # Distinct leader variants of the group, in first-appearance order.
+    policies: list[tuple[str, str]] = []
+    pol_idx = []
+    for c in cfgs:
+        key = (c.policy.ds, c.policy.sa)
+        if key not in policies:
+            policies.append(key)
+        pol_idx.append(policies.index(key))
+    run = _build_scan_runner(cfg, model, trainer, policies)
 
     # The scan leader ranks float32 age*beta products (core.leader_jax
     # .priority_order); they are integer-exact — and hence tie/order
@@ -577,9 +663,25 @@ def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
 
     t_start = time.time()
     bmax = max(int(p.part.beta.max()) for p in preps)
-    datas = [_scan_inputs(p, ra, bmax) for p, ra in zip(preps, ras)]
+    datas = [_scan_inputs(p, ra, bmax, i)
+             for p, ra, i in zip(preps, ras, pol_idx)]
+    n_dev = jax.local_device_count()
     if len(datas) == 1:
         ys = jax.jit(run)(datas[0])
+    elif shard and n_dev > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec
+
+        pad = (-len(datas)) % n_dev
+        stacked = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves),
+            *(list(datas) + [datas[0]] * pad))
+        mesh = Mesh(np.asarray(jax.local_devices()), ("batch",))
+        sharded = shard_map(jax.vmap(run), mesh=mesh,
+                            in_specs=PartitionSpec("batch"),
+                            out_specs=PartitionSpec("batch"),
+                            check_rep=False)
+        ys = jax.jit(sharded)(stacked)
     else:
         stacked = jax.tree_util.tree_map(
             lambda *leaves: jnp.stack(leaves), *datas)
@@ -601,19 +703,51 @@ def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
 
 def run_many(cfgs: Sequence[SimConfig], *,
              ra_backend: str | None = None,
-             engine: str = "loop") -> list[SimHistory]:
+             engine: str = "loop",
+             shard: bool | None = None) -> list[SimHistory]:
     """Run several simulations, sharing ONE batched whole-horizon Γ solve.
 
-    The control-plane cost of a sweep (multiple seeds / radii / budgets,
-    Figs. 5-9) collapses into a single device batch; each simulation then
-    replays its precomputed per-round slices — through `plan_round` on the
-    host (engine="loop"), or through the fused `lax.scan` round loop
-    (engine="scan"), where configs differing only in seed / wireless data
-    are additionally `vmap`ped into one compiled program (DESIGN.md §8).
+    The control-plane cost of a sweep (multiple seeds / radii / budgets /
+    policies, Figs. 3-9) collapses into a single device batch; each
+    simulation then replays its precomputed per-round slices — through
+    `plan_round` on the host (engine="loop"), or through the fused
+    `lax.scan` round loop (engine="scan"), where configs differing only in
+    seed / wireless data / policy.ds / policy.sa are additionally batched
+    into one compiled program (DESIGN.md §8, §10).
+
+    Configs identical up to the policy also share one `_Prepared` world
+    (dataset, topology, channel horizon, injected permutations — all drawn
+    before the policy is consulted) and one Γ solve per RA scheme, so a
+    policy grid over S seeds samples and solves S worlds, not S x P.
+
+    Args:
+      cfgs: the simulations to run; results are returned in the same order.
+      ra_backend: projection backend for the Γ solver (None = default;
+        see `kernels.polyblock_project.ops`).
+      engine: "loop" (host round loop) or "scan" (device-resident).
+      shard: shard the scan engine's batch axis across local devices via
+        `shard_map`.  None (default) auto-enables sharding when more than
+        one local device is visible; False forces single-device `vmap`;
+        True asks for sharding (a no-op on one device).  Ignored by
+        engine="loop".
     """
     if engine not in ("loop", "scan"):
         raise ValueError(f"unknown engine: {engine}")
-    preps = [_prepare(c) for c in cfgs]
+    if shard is None:
+        shard = jax.local_device_count() > 1
+
+    # One _Prepared world per policy-free config: policy-only variants
+    # share data/topology/channels by construction (and hence Γ, below).
+    preps_by_key: dict[SimConfig, _Prepared] = {}
+    preps: list[_Prepared] = []
+    for c in cfgs:
+        key = _prep_key(c)
+        if key not in preps_by_key:
+            preps_by_key[key] = _prepare(c)
+        shared = preps_by_key[key]
+        preps.append(shared if shared.cfg == c
+                     else dataclasses.replace(shared, cfg=c))
+
     ras, plan_walls = _solve_horizons(preps, ra_backend)
     if engine == "loop":
         return [_run_prepared(p, ra, s) for p, ra, s in zip(preps, ras, plan_walls)]
@@ -626,7 +760,8 @@ def run_many(cfgs: Sequence[SimConfig], *,
         hists = _run_group_scan([cfgs[i] for i in idx],
                                 [preps[i] for i in idx],
                                 [ras[i] for i in idx],
-                                [plan_walls[i] for i in idx])
+                                [plan_walls[i] for i in idx],
+                                shard=shard)
         for i, h in zip(idx, hists):
             out[i] = h
     return out
@@ -634,4 +769,12 @@ def run_many(cfgs: Sequence[SimConfig], *,
 
 def run_simulation(cfg: SimConfig, *, ra_backend: str | None = None,
                    engine: str = "loop") -> SimHistory:
+    """Run ONE simulation (the trajectory behind one curve of Figs. 3-9).
+
+    Equivalent to ``run_many([cfg])[0]``: the whole channel horizon is
+    pre-sampled and Γ solved in one batched Algorithm-1 call, then the
+    round loop runs on the chosen engine ("loop" = host, "scan" =
+    device-resident `lax.scan`; both consume identical randomness and
+    produce identical transmitted sets — DESIGN.md §8).
+    """
     return run_many([cfg], ra_backend=ra_backend, engine=engine)[0]

@@ -1,0 +1,86 @@
+"""Docs reference check: README.md / RESULTS.md must not drift from the
+repo.
+
+Every repo-relative path mentioned in their markdown links or fenced code
+blocks must exist, and every ``--flag`` a code block passes to
+``examples/reproduce_figures.py`` (or ``benchmarks/run.py``) must appear
+in that entry point's source.  Placeholders (``<name>``, ``v####``) are
+exempt.  CI runs this as the `docs-check` job.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = [p for p in (ROOT / "README.md", ROOT / "RESULTS.md") if p.exists()]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+_FENCE_RE = re.compile(r"```[^\n]*\n(.*?)```", re.S)
+# A repo-relative file token inside a code block.
+_PATH_RE = re.compile(
+    r"(?<![\w/.-])((?:src|tests|examples|benchmarks|results|\.github)"
+    r"/[\w./-]+\.\w+|[A-Z][\w.-]*\.(?:md|json|ini|txt))(?![\w/-])")
+_FLAG_RE = re.compile(r"(--[a-z][\w-]*)")
+_PLACEHOLDER = re.compile(r"[<>*#]|\{|\}|v#|XXXX")
+
+FLAG_SOURCES = {
+    "reproduce_figures.py": ROOT / "examples" / "reproduce_figures.py",
+    "benchmarks.run": ROOT / "benchmarks" / "run.py",
+    "multi_cell.py": ROOT / "examples" / "multi_cell.py",
+}
+# Flags consumed by tools, not by our entry points.
+_GENERIC_FLAGS = {"--upgrade"}
+
+
+def test_docs_exist():
+    assert (ROOT / "README.md").exists(), "README.md missing"
+    assert (ROOT / "RESULTS.md").exists(), "RESULTS.md missing"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_markdown_links_resolve(doc: Path):
+    text = doc.read_text()
+    missing = []
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if _PLACEHOLDER.search(target):
+            continue
+        if not (ROOT / target).exists():
+            missing.append(target)
+    assert not missing, f"{doc.name} links to missing paths: {missing}"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_code_block_paths_exist(doc: Path):
+    missing = []
+    for block in _FENCE_RE.findall(doc.read_text()):
+        for line in block.splitlines():
+            if _PLACEHOLDER.search(line):
+                continue
+            for token in _PATH_RE.findall(line):
+                if not (ROOT / token).exists():
+                    missing.append(token)
+    assert not missing, f"{doc.name} code blocks reference missing: {missing}"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_code_block_flags_exist(doc: Path):
+    """Flags passed to our entry points must appear in their argparse/source."""
+    bad = []
+    for block in _FENCE_RE.findall(doc.read_text()):
+        for line in block.splitlines():
+            srcs = [src for key, src in FLAG_SOURCES.items() if key in line]
+            if not srcs:
+                continue
+            src_text = "".join(s.read_text() for s in srcs)
+            for flag in _FLAG_RE.findall(line):
+                if flag in _GENERIC_FLAGS:
+                    continue
+                if flag not in src_text:
+                    bad.append(f"{flag} (not in "
+                               f"{'/'.join(s.name for s in srcs)})")
+    assert not bad, f"{doc.name} passes unknown flags: {bad}"

@@ -203,3 +203,5 @@ def test_hierarchical_two_cells():
     assert out["loss"].shape == (8,)
     assert np.isfinite(out["loss"]).all()
     assert out["loss"][-1] < out["loss"][0]
+    # engine matrix + full coverage lives in tests/test_hierarchical.py
+    # (this module needs hypothesis; that one always runs).

@@ -1,0 +1,50 @@
+"""Multi-cell (hierarchical) harness: engine matrix + trace contract.
+
+Separate from test_fl_substrate.py so it runs even without hypothesis
+(that module importorskips itself away).  Pins the DESIGN.md §10 claim:
+the fused multi-cell scan engine replays the host loop's per-cell
+transmitted sets, losses, and latencies for every policy family.
+"""
+import numpy as np
+import pytest
+
+from repro.core import RoundPolicy
+from repro.fl import HierSimConfig, run_hierarchical
+
+
+def test_hierarchical_output_contract():
+    cfg = HierSimConfig(rounds=5, n_samples=150, n_cells=2,
+                        devices_per_cell=8, subchannels_per_cell=3)
+    out = run_hierarchical(cfg)
+    assert out["loss"].shape == (5,)
+    assert out["latency"].shape == (5,)
+    assert out["tx"].shape == (5, 2, 8)
+    assert np.isfinite(out["loss"]).all()
+    assert (out["latency"] >= 0).all()
+    assert out["wall_s"] > 0
+
+
+def test_hierarchical_rejects_unknown_engine():
+    with pytest.raises(ValueError):
+        run_hierarchical(HierSimConfig(rounds=1), engine="warp")
+
+
+@pytest.mark.slow
+def test_hierarchical_engine_equivalence():
+    """scan == loop: same per-cell transmitted sets, same losses/latencies,
+    across the proposed and benchmark policy families."""
+    for policy in (RoundPolicy(), RoundPolicy(ds="random", ra="fix"),
+                   RoundPolicy(ds="cluster", sa="random")):
+        cfg = HierSimConfig(rounds=4, n_samples=150, policy=policy)
+        a = run_hierarchical(cfg, engine="loop")
+        b = run_hierarchical(cfg, engine="scan")
+        assert np.array_equal(a["tx"], b["tx"]), policy.label
+        np.testing.assert_allclose(a["loss"], b["loss"], rtol=2e-5)
+        np.testing.assert_allclose(a["latency"], b["latency"], rtol=2e-5)
+
+
+@pytest.mark.slow
+def test_hierarchical_scan_three_cells_converges():
+    out = run_hierarchical(
+        HierSimConfig(rounds=10, n_samples=200, n_cells=3), engine="scan")
+    assert out["loss"][-1] < out["loss"][0]
