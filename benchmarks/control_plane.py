@@ -18,7 +18,14 @@ the perf trajectory is machine-readable across PRs.  Acceptance rows:
     dispatch must be >= 2x faster than the equivalent loop of solo
     `run_simulation(engine="scan")` calls (the grid compiles one
     lax.switch program and shares worlds/Γ across policy variants; the
-    solo loop pays per-call compilation and preparation).
+    solo loop pays per-call compilation and preparation);
+  * `scenario_traces` — whole-horizon environment generation + Γ solve
+    (+ churn fold-in) for the `urban` stress preset vs `static`
+    (DESIGN.md §11): the scenario layer's overhead over the legacy
+    static world, measured end-to-end at control-plane scale.  Not an
+    acceptance gate — trace generation is host-side numpy and runs once
+    per world — but recorded so regressions in the dynamic path show up
+    in the perf trajectory.
 """
 from __future__ import annotations
 
@@ -37,12 +44,17 @@ from repro.core import (
     solve_pairs_jit,
 )
 from repro.fl import SimConfig, run_many, run_simulation
+from repro.scenarios import apply_dynamics, generate_traces
 
 from .common import emit
 
 K = 4
 HORIZON_ROUNDS = 100
 HORIZON_N = 512
+
+SCN_ROUNDS = 100
+SCN_N = 128
+SCN_REPS = 2
 
 SWEEP_SEEDS = 8
 SWEEP_REPS = 3
@@ -179,6 +191,40 @@ def run(json_path: str | None = None):
         "solo_loop_s_all": t_solo, "grid_s_all": t_grid,
         "speedup": grid_speedup, "results_agree": bool(grid_agree),
         "target_speedup": 2.0, "meets_target": bool(grid_speedup >= 2.0),
+    }
+
+    # ---- scenario layer: trace-gen + solve overhead vs the static world ---
+    wcfg = WirelessConfig(n_devices=SCN_N, n_subchannels=K)
+    rng = np.random.default_rng(0)
+    beta = rng.integers(5, 60, SCN_N).astype(float)
+    emax0 = np.full((SCN_ROUNDS, SCN_N), wcfg.e_max_j)
+    solve_pairs_jit(beta[None, None, :],
+                    generate_traces(0, wcfg, "static", SCN_ROUNDS).h2_all,
+                    wcfg, emax0[:, None, :])                # warm/compile
+    scn_rec = {}
+    for name in ("static", "urban"):
+        t_gen, t_solve = [], []
+        for _ in range(SCN_REPS):
+            t0 = time.time()
+            tr = generate_traces(0, wcfg, name, SCN_ROUNDS)
+            t_gen.append(time.time() - t0)
+            t0 = time.time()
+            ra = solve_pairs_jit(beta[None, None, :], tr.h2_all, wcfg,
+                                 np.broadcast_to(tr.e_max_j[:, None, :],
+                                                 tr.h2_all.shape))
+            apply_dynamics(ra, tr.avail, tr.slowdown, beta, wcfg)
+            t_solve.append(time.time() - t0)
+        scn_rec[name] = {"trace_gen_s": min(t_gen), "solve_s": min(t_solve),
+                         "total_s": min(t_gen) + min(t_solve)}
+        rows.append([f"scenario/{name}/N{SCN_N}",
+                     round(scn_rec[name]["total_s"] * 1e6, 1),
+                     f"{SCN_ROUNDS} rounds, gen={min(t_gen)*1e3:.1f}ms"])
+    overhead = scn_rec["urban"]["total_s"] / scn_rec["static"]["total_s"]
+    rows[-1][2] += f", {overhead:.2f}x vs static"
+    record["scenario_traces"] = {
+        "rounds": SCN_ROUNDS, "N": SCN_N, "K": K, "reps": SCN_REPS,
+        **{f"{k}_{m}": v for k, d in scn_rec.items() for m, v in d.items()},
+        "overhead_vs_static": overhead,
     }
 
     emit("control_plane", ["us_per_call", "derived"], rows)

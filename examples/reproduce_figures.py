@@ -14,6 +14,14 @@ several seeds through the vmapped scan engine, then writes:
   PYTHONPATH=src python examples/reproduce_figures.py --smoke      # CI smoke
   PYTHONPATH=src python examples/reproduce_figures.py --engine loop  # reference
 
+Scenario robustness (DESIGN.md §11): pass one or more --scenario presets
+(static / corr_fading / mobility / churn / harvest / urban) to cross the
+policy grid with time-varying environments — the whole policy x scenario
+x seed grid still dispatches as one compiled scan program:
+
+  PYTHONPATH=src python examples/reproduce_figures.py \
+      --name scenario_robustness --scenario static --scenario corr_fading
+
 Every run appends a NEW version directory; RESULTS.md documents the
 gallery generated from these artifacts.
 """
@@ -24,9 +32,11 @@ from repro.experiments import SweepSpec, run_sweep
 
 
 def build_spec(args: argparse.Namespace) -> SweepSpec:
+    scenarios = tuple(args.scenario) if args.scenario else ("static",)
     if args.smoke:       # CI: 2 policies x 2 seeds, minutes on 2 CPU cores
         return SweepSpec(
             name=args.name, datasets="mnist", ds=("alg3", "random"),
+            scenarios=scenarios,
             seeds=(0, 1), rounds=12, n_devices=12, n_subchannels=4,
             target_loss=args.target_loss,
             overrides={"n_samples": 128, "batch": 16, "eval_every": 3,
@@ -34,11 +44,13 @@ def build_spec(args: argparse.Namespace) -> SweepSpec:
     if args.full:        # paper scale (Table I / Sec. VI)
         return SweepSpec(
             name=args.name, datasets="mnist", ds=PAPER_BASELINE_DS,
+            scenarios=scenarios,
             seeds=tuple(range(args.seeds)), rounds=300,
             n_devices=20, n_subchannels=4, target_loss=args.target_loss)
     # default: reduced scale, same scheme ordering (DESIGN.md §2)
     return SweepSpec(
         name=args.name, datasets="mnist", ds=PAPER_BASELINE_DS,
+        scenarios=scenarios,
         seeds=tuple(range(args.seeds)), rounds=60,
         n_devices=20, n_subchannels=4, target_loss=args.target_loss,
         overrides={"n_samples": 500, "eval_every": 5})
@@ -57,11 +69,16 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper scale")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI grid (2 policies x 2 seeds)")
+    ap.add_argument("--scenario", action="append", default=None,
+                    metavar="PRESET",
+                    help="environment scenario preset (repeatable; adds a "
+                         "scenario axis to the grid — see repro.scenarios)")
     args = ap.parse_args()
 
     spec = build_spec(args)
     print(f"sweep {spec.name!r}: {spec.n_cells} cells "
-          f"({len(spec.policies)} policies x {len(spec.seeds)} seeds), "
+          f"({len(spec.policies)} policies x {len(spec.scenarios)} scenarios "
+          f"x {len(spec.seeds)} seeds), "
           f"{spec.rounds} rounds, engine={args.engine}")
     res = run_sweep(spec, engine=args.engine,
                     results_root=args.results_root, figures=True)
@@ -71,8 +88,12 @@ def main() -> None:
     print(f"\n{'policy':34s} {'final loss':>10s} {'rounds→{:g}'.format(spec.target_loss):>10s} "
           f"{'util':>6s} {'cum lat (s)':>12s}")
     rows: dict[str, list[dict]] = {}
+    many_sc = len(spec.scenarios) > 1
     for c in res.record["cells"]:
-        rows.setdefault(c["policy"]["label"], []).append(c["metrics"])
+        label = c["policy"]["label"]
+        if many_sc:   # never pool metrics across environments
+            label = f"{label} @{c['scenario']}"
+        rows.setdefault(label, []).append(c["metrics"])
     for label, ms in rows.items():
         import numpy as np
         r2t = [m["rounds_to_target"] for m in ms]

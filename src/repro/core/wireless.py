@@ -57,6 +57,13 @@ class WirelessConfig:
     cpu_hz: float = 1e9              # C_n (homogeneous default; can be per-device)
     model_bits: float = 1e6          # D(w) uplink payload in bits
     e_max_j: float = 0.02            # per-round energy budget E_n^max
+    min_dist_m: float = 1.0          # physical path-loss floor (d >= this)
+
+    def __post_init__(self):
+        if not self.min_dist_m > 0.0:
+            raise ValueError(
+                f"min_dist_m must be > 0 (the eq.-3 path loss d^-a diverges "
+                f"at d=0), got {self.min_dist_m}")
 
     @property
     def pt_w(self) -> float:
@@ -90,7 +97,7 @@ def sample_topology(rng: np.random.Generator, cfg: WirelessConfig) -> Topology:
     # Uniform area density => r = R * sqrt(u).
     r = cfg.radius_m * np.sqrt(rng.uniform(size=cfg.n_devices))
     # Keep a minimum distance so the path loss stays physical.
-    return Topology(distances_m=np.maximum(r, 1.0))
+    return Topology(distances_m=np.maximum(r, cfg.min_dist_m))
 
 
 def sample_channel_gains(

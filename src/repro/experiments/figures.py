@@ -56,40 +56,50 @@ _DS_ORDER = list(POLICY_COLORS)
 @dataclasses.dataclass(frozen=True)
 class Facet:
     """One homogeneous slice of a record: everything but ds scheme and
-    seed is fixed, so seed-averaging within it is meaningful."""
+    seed is fixed, so seed-averaging within it is meaningful.  Scenario is
+    a facet key — pooling different environments into one curve would
+    fabricate a world that was never simulated."""
 
     dataset: str
     n_devices: int
     n_subchannels: int
     ra: str
     sa: str
-    suffix: str    # filename suffix ("mnist", "mnist-N40-K8-fix.random", ...)
+    scenario: str
+    suffix: str    # filename suffix ("mnist", "mnist-urban", ...)
 
     def matches(self, cell: dict) -> bool:
         return (cell["dataset"] == self.dataset
                 and cell["n_devices"] == self.n_devices
                 and cell["n_subchannels"] == self.n_subchannels
                 and cell["policy"]["ra"] == self.ra
-                and cell["policy"]["sa"] == self.sa)
+                and cell["policy"]["sa"] == self.sa
+                and cell.get("scenario", "static") == self.scenario)
 
 
 def facets(record: dict) -> list[Facet]:
-    """Distinct (dataset, N, K, ra, sa) slices, with minimal suffixes:
-    shape/scheme parts appear only when the record actually varies them."""
+    """Distinct (dataset, N, K, ra, sa, scenario) slices, with minimal
+    suffixes: shape/scheme/scenario parts appear only when the record
+    actually varies them.  (Pre-scenario artifacts carry no "scenario"
+    key; those cells facet as "static".)"""
     keys = sorted({(c["dataset"], c["n_devices"], c["n_subchannels"],
-                    c["policy"]["ra"], c["policy"]["sa"])
+                    c["policy"]["ra"], c["policy"]["sa"],
+                    c.get("scenario", "static"))
                    for c in record["cells"]})
-    many_shapes = len({(d, n, k) for d, n, k, _, _ in keys}) > len(
+    many_shapes = len({(d, n, k) for d, n, k, *_ in keys}) > len(
         {d for d, *_ in keys})
-    many_schemes = len({(r, s) for *_, r, s in keys}) > 1
+    many_schemes = len({(r, s) for _, _, _, r, s, _ in keys}) > 1
+    many_scenarios = len({sc for *_, sc in keys}) > 1
     out = []
-    for d, n, k, r, s in keys:
+    for d, n, k, r, s, sc in keys:
         suffix = d
         if many_shapes:
             suffix += f"-N{n}-K{k}"
         if many_schemes:
             suffix += f"-{r}.{s}"
-        out.append(Facet(d, n, k, r, s, suffix))
+        if many_scenarios:
+            suffix += f"-{sc}"
+        out.append(Facet(d, n, k, r, s, sc, suffix))
     return out
 
 

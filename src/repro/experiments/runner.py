@@ -21,6 +21,7 @@ from typing import Sequence
 import jax
 
 from ..fl.sim import SimHistory, run_many
+from ..scenarios import scenario_name
 from .metrics import per_round_utilization, summarize_cell
 from .spec import SweepCell, SweepSpec
 from .store import next_version_dir, write_record
@@ -56,6 +57,7 @@ def _cell_record(cell: SweepCell, hist: SimHistory,
         "dataset": cfg.dataset,
         "n_devices": cfg.n_devices,
         "n_subchannels": cfg.n_subchannels,
+        "scenario": scenario_name(cfg.scenario),
         "seed": cfg.seed,
         "policy": {"ds": cfg.policy.ds, "ra": cfg.policy.ra,
                    "sa": cfg.policy.sa, "label": cfg.policy.label},
@@ -132,14 +134,16 @@ def run_sweep(spec: SweepSpec, *,
 def group_mean_curves(record: dict, *, dataset: str | None = None,
                       n_devices: int | None = None,
                       n_subchannels: int | None = None,
+                      scenario: str | None = None,
                       key: str = "global_loss") -> dict[str, tuple]:
     """Average a per-cell eval curve over SEEDS, per policy label.
 
     Returns {policy_label: (rounds, mean_curve)} for cells matching the
-    given dataset / N / K (each None = the record's only value; raises if
-    the record varies an unfiltered axis, so heterogeneous configs are
-    never silently pooled into one curve).  The label is the full
-    ds+ra+sa scheme name, so distinct policies never merge either.
+    given dataset / N / K / scenario (each None = the record's only
+    value; raises if the record varies an unfiltered axis, so
+    heterogeneous configs are never silently pooled into one curve).  The
+    label is the full ds+ra+sa scheme name, so distinct policies never
+    merge either.
     """
     cells = record["cells"]
 
@@ -156,11 +160,14 @@ def group_mean_curves(record: dict, *, dataset: str | None = None,
     n_devices = resolve("n_devices", n_devices, lambda c: c["n_devices"])
     n_subchannels = resolve("n_subchannels", n_subchannels,
                             lambda c: c["n_subchannels"])
+    scenario = resolve("scenario", scenario,
+                       lambda c: c.get("scenario", "static"))
     by_label: dict[str, list] = {}
     rounds_by_label: dict[str, Sequence[int]] = {}
     for c in cells:
-        if (c["dataset"], c["n_devices"], c["n_subchannels"]) != (
-                dataset, n_devices, n_subchannels):
+        if (c["dataset"], c["n_devices"], c["n_subchannels"],
+                c.get("scenario", "static")) != (
+                dataset, n_devices, n_subchannels, scenario):
             continue
         lab = c["policy"]["label"]
         by_label.setdefault(lab, []).append(c["curves"][key])

@@ -2,9 +2,10 @@
 
 A `SweepSpec` names a Cartesian grid over the paper's comparison axes —
 device-selection / resource-allocation / sub-channel-assignment schemes
-(Sec. VI policies), datasets, network sizes (N, K), and seeds — and expands
-it into concrete `SimConfig` cells with stable, path-safe ids.  The
-expansion order is fixed (dataset-major, then (N, K), then the
+(Sec. VI policies), datasets, network sizes (N, K), environment scenarios
+(`repro.scenarios` presets), and seeds — and expands it into concrete
+`SimConfig` cells with stable, path-safe ids.  The expansion order is
+fixed (dataset-major, then (N, K), then scenario, then the
 `core.policy_grid` policy order, then seed) so cell ids and artifact
 layouts are reproducible across runs and machines.
 
@@ -22,6 +23,7 @@ from typing import Any, Sequence
 
 from ..core.stackelberg import RoundPolicy, policy_grid
 from ..fl.sim import SimConfig
+from ..scenarios import Scenario, get_scenario
 
 __all__ = ["SweepSpec", "SweepCell"]
 
@@ -31,7 +33,7 @@ _NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
 _OVERRIDABLE = frozenset(
     f.name for f in dataclasses.fields(SimConfig)
     if f.name not in ("dataset", "n_devices", "n_subchannels", "seed",
-                      "policy", "rounds"))
+                      "policy", "rounds", "scenario"))
 
 
 def _axis(v) -> tuple:
@@ -61,6 +63,11 @@ class SweepSpec:
       ds / ra / sa: policy scheme axes, crossed via `core.policy_grid`
         (eq. 42-43 selection, Algorithm-1 vs FIX RA, Algorithm-2 vs R-SA).
       n_devices / n_subchannels: network-size axes (N, K), crossed.
+      scenarios: environment-scenario axis, by preset/registered name
+        (`repro.scenarios.PRESETS`; "static" = the paper's fixed world).
+        Scenarios vary only trace data, never program shape, so a
+        policy x scenario x seed grid still dispatches as ONE compiled
+        scan program per shape (DESIGN.md §11).
       seeds: world seeds; cells differing only in policy share one sampled
         world and one Γ solve (`fl.run_many` dedups them).
       rounds: communication rounds per cell (scalar — part of the compiled
@@ -79,6 +86,7 @@ class SweepSpec:
     sa: Sequence[str] = ("matching",)
     n_devices: Sequence[int] = (20,)
     n_subchannels: Sequence[int] = (4,)
+    scenarios: Sequence[str] = ("static",)
     seeds: Sequence[int] = (0,)
     rounds: int = 100
     target_loss: float | None = None
@@ -87,9 +95,40 @@ class SweepSpec:
     def __post_init__(self):
         if not _NAME_RE.match(self.name):
             raise ValueError(f"sweep name not path-safe: {self.name!r}")
+        # Scenario objects are welcome but normalize to their registry NAME
+        # (specs must stay JSON-serializable and reproducible by name) —
+        # and only if the registry entry IS that object's configuration;
+        # silently substituting a same-named preset would mislabel the
+        # artifact.
+        def norm(s):
+            if not isinstance(s, Scenario):
+                return s
+            try:
+                registered = get_scenario(s.name)
+            except ValueError:
+                raise ValueError(
+                    f"scenario object {s.name!r} is not registered — "
+                    f"register_scenario(...) it first so the spec stays "
+                    f"reproducible by name") from None
+            if registered != s:
+                raise ValueError(
+                    f"scenario object {s.name!r} differs from the "
+                    f"registered preset of that name — register it under "
+                    f"a distinct name")
+            return s.name
+
+        sc_axis = self.scenarios
+        if isinstance(sc_axis, (str, Scenario)):
+            sc_axis = (sc_axis,)
+        object.__setattr__(self, "scenarios",
+                           tuple(norm(s) for s in sc_axis))
         for field in ("datasets", "ds", "ra", "sa", "n_devices",
-                      "n_subchannels", "seeds"):
+                      "n_subchannels", "scenarios", "seeds"):
             object.__setattr__(self, field, _axis(getattr(self, field)))
+        for sc in self.scenarios:   # validate eagerly: known AND path-safe
+            get_scenario(sc)        # (names flow into cell ids + filenames)
+            if not _NAME_RE.match(sc):
+                raise ValueError(f"scenario name not path-safe: {sc!r}")
         ov = self.overrides
         ov = tuple(sorted(ov.items())) if isinstance(ov, dict) else tuple(
             (str(k), v) for k, v in ov)
@@ -110,25 +149,31 @@ class SweepSpec:
     @property
     def n_cells(self) -> int:
         return (len(self.datasets) * len(self.n_devices)
-                * len(self.n_subchannels) * len(self.policies)
-                * len(self.seeds))
+                * len(self.n_subchannels) * len(self.scenarios)
+                * len(self.policies) * len(self.seeds))
 
     def cells(self) -> list[SweepCell]:
-        """Expand the grid: dataset > (N, K) > policy > seed, stable ids."""
+        """Expand the grid: dataset > (N, K) > scenario > policy > seed.
+
+        Ids are stable; the scenario segment is omitted for "static" so
+        pre-scenario sweep ids (and committed artifacts) stay unchanged.
+        """
         out: list[SweepCell] = []
         ov = dict(self.overrides)
         for dataset in self.datasets:
             for n in self.n_devices:
                 for k in self.n_subchannels:
-                    for pol in self.policies:
-                        for seed in self.seeds:
-                            cfg = SimConfig(
-                                dataset=dataset, n_devices=n,
-                                n_subchannels=k, rounds=self.rounds,
-                                policy=pol, seed=seed, **ov)
-                            cid = (f"{dataset}-N{n}-K{k}-"
-                                   f"{pol.ds}.{pol.ra}.{pol.sa}-s{seed}")
-                            out.append(SweepCell(cid, len(out), cfg))
+                    for sc in self.scenarios:
+                        sc_part = "" if sc == "static" else f"-{sc}"
+                        for pol in self.policies:
+                            for seed in self.seeds:
+                                cfg = SimConfig(
+                                    dataset=dataset, n_devices=n,
+                                    n_subchannels=k, rounds=self.rounds,
+                                    policy=pol, seed=seed, scenario=sc, **ov)
+                                cid = (f"{dataset}-N{n}-K{k}{sc_part}-"
+                                       f"{pol.ds}.{pol.ra}.{pol.sa}-s{seed}")
+                                out.append(SweepCell(cid, len(out), cfg))
         return out
 
     def to_json(self) -> dict:

@@ -30,6 +30,18 @@ permutations drawn in `_prepare`), so their transmitted sets, AoU
 trajectories, and latencies coincide exactly; the differential harness
 tests/test_scan_equivalence.py pins this for every RoundPolicy.
 
+Scenario layer (DESIGN.md §11): the wireless environment of a simulation
+is a named `repro.scenarios.Scenario` — temporally correlated fading,
+device mobility, churn/stragglers, and energy-harvesting budgets generated
+as whole-horizon traces by `_prepare` (the `static` preset replays the
+legacy inline sampling bit-exactly).  Traces enter through the SAME three
+tensors both engines already consume — the channel horizon `h2_all`
+(fading x mobility), the solver's per-element energy budgets
+(harvesting), and the solved `RAResult` (churn availability folds into
+the Prop-1 mask, straggler slowdowns into the eq.-1 compute share of Γ,
+via `scenarios.apply_dynamics`) — so the loop/scan/vmap/shard paths stay
+differentially equivalent under every scenario with zero engine changes.
+
 Sweep extensions (DESIGN.md §10): configs that differ only in
 `policy.ds`/`policy.sa` share ONE `_Prepared` world (same seed => same
 data/topology/channels) and ONE whole-horizon Γ solve, and the scan engine
@@ -61,11 +73,19 @@ from ..core import (
     make_clusters,
     participation_deficit,
     plan_round,
-    sample_channel_gains,
-    sample_topology,
     solve_pairs_jit,
 )
 from ..core.monotonic import fixed_ra
+from ..scenarios import (
+    Scenario,
+    apply_dynamics,
+    compose_gains,
+    get_scenario,
+    sample_churn,
+    sample_distances,
+    sample_energy,
+    sample_fading,
+)
 from ..data.fl_datasets import (
     Dataset,
     FLPartition,
@@ -112,6 +132,7 @@ class SimConfig:
     track_gradnorm: bool = False       # needed for the Prop-3 bound benchmark
     partition: str = "iid"             # "iid" (paper) | "dirichlet" (non-IID ext.)
     dirichlet_alpha: float = 0.5
+    scenario: str | Scenario = "static"  # environment preset name or Scenario
 
     def wireless(self) -> WirelessConfig:
         t1 = TABLE1[self.dataset]
@@ -193,38 +214,73 @@ class _Prepared:
     fixed_ids: np.ndarray
     sel_perms: np.ndarray          # (rounds, N) injected device permutations
     assign_perms: np.ndarray       # (rounds, K) injected channel permutations
+    # Scenario traces (DESIGN.md §11): the whole-horizon environment.
+    distances: np.ndarray          # (rounds, N) mobility distance trace
+    avail: np.ndarray              # (rounds, N) bool churn availability
+    slowdown: np.ndarray           # (rounds, N) straggler compute multipliers
+    emax_all: np.ndarray           # (rounds, N) per-round energy budgets
 
 
-def _prepare(cfg: SimConfig) -> _Prepared:
-    """Sample data, topology, and the whole channel horizon up front."""
+def _prepare(cfg: SimConfig, _data_cache: dict | None = None) -> _Prepared:
+    """Sample data + the whole-horizon scenario environment up front.
+
+    The scenario processes replace the legacy inline topology / channel
+    sampling at the SAME positions of the world rng stream (distances
+    where `sample_topology` drew, fading where `sample_channel_gains`
+    drew), and the scenario-only processes (churn, energy) draw strictly
+    AFTER the legacy stream — so the `static` preset consumes the
+    bit-identical stream and reproduces legacy trajectories exactly
+    (tests/test_scenarios.py pins this).
+
+    `_data_cache` (threaded in by `run_many`) shares the dataset phase —
+    dataset, partition, padded client buffers — across worlds that differ
+    only in scenario: the rng prefix through the partition draw never
+    consults the scenario, so the cache stores the generator state at the
+    branch point and replaying it is bit-identical to resampling.
+    """
     rng = np.random.default_rng(cfg.seed)
     wcfg = cfg.wireless()
+    scn = get_scenario(cfg.scenario)
 
-    ds_kw = {} if cfg.n_samples is None else {"n": cfg.n_samples}
-    ds = make_dataset(cfg.dataset, rng, **ds_kw)
-    if cfg.partition == "dirichlet":
-        part = partition_dirichlet(rng, ds.y, cfg.n_devices, cfg.dirichlet_alpha)
+    data_key = (cfg.dataset, cfg.n_samples, cfg.partition,
+                cfg.dirichlet_alpha, cfg.n_devices, cfg.seed)
+    if _data_cache is not None and data_key in _data_cache:
+        ds, part, beta, x_all, y_all, m_all, state = _data_cache[data_key]
+        rng.bit_generator.state = state
     else:
-        part = partition_imbalanced_iid(rng, ds.n, cfg.n_devices)
-    beta = part.beta.astype(np.float64)
-    x_all, y_all, m_all = _pad_partition(ds, part)
+        ds_kw = {} if cfg.n_samples is None else {"n": cfg.n_samples}
+        ds = make_dataset(cfg.dataset, rng, **ds_kw)
+        if cfg.partition == "dirichlet":
+            part = partition_dirichlet(rng, ds.y, cfg.n_devices,
+                                       cfg.dirichlet_alpha)
+        else:
+            part = partition_imbalanced_iid(rng, ds.n, cfg.n_devices)
+        beta = part.beta.astype(np.float64)
+        x_all, y_all, m_all = _pad_partition(ds, part)
+        if _data_cache is not None:
+            _data_cache[data_key] = (ds, part, beta, x_all, y_all, m_all,
+                                     rng.bit_generator.state)
 
-    topo = sample_topology(rng, wcfg)
+    distances = sample_distances(rng, wcfg, scn.mobility, cfg.rounds)
     clusters = make_clusters(cfg.n_devices, cfg.n_subchannels, rng)
     fixed_ids = rng.permutation(cfg.n_devices)[: cfg.n_subchannels]
-    h2_all = np.stack(
-        [sample_channel_gains(rng, wcfg, topo) for _ in range(cfg.rounds)])
+    g2_all = sample_fading(rng, wcfg, scn.fading, cfg.rounds)
+    h2_all = compose_gains(g2_all, distances, wcfg)
     # One randomness stream for BOTH engines (DESIGN.md §8): every round's
     # leader-plane permutations are drawn here, never inside the loop.
     sel_perms = np.stack([rng.permutation(cfg.n_devices)
                           for _ in range(cfg.rounds)])
     assign_perms = np.stack([rng.permutation(cfg.n_subchannels)
                              for _ in range(cfg.rounds)])
+    avail, slowdown = sample_churn(rng, scn.churn, cfg.rounds, cfg.n_devices)
+    emax_all = sample_energy(rng, wcfg, scn.energy, cfg.rounds)
 
     return _Prepared(cfg=cfg, wcfg=wcfg, rng=rng, ds=ds, part=part, beta=beta,
                      x_all=x_all, y_all=y_all, m_all=m_all, h2_all=h2_all,
                      clusters=clusters, fixed_ids=fixed_ids,
-                     sel_perms=sel_perms, assign_perms=assign_perms)
+                     sel_perms=sel_perms, assign_perms=assign_perms,
+                     distances=distances, avail=avail, slowdown=slowdown,
+                     emax_all=emax_all)
 
 
 def _solve_horizons(
@@ -235,7 +291,10 @@ def _solve_horizons(
     All MO-RA horizons are flattened into ONE jitted solver call per
     wireless-constant group (the solver is elementwise over pairs, so
     heterogeneous seeds/radii/budgets concatenate freely); FIX-RA horizons
-    are a closed form, evaluated per config.  Returns the per-sim RAResults
+    are a closed form, evaluated per config.  Energy budgets are the
+    scenario's per-round per-device trace (`_Prepared.emax_all`,
+    constant = the legacy e_max_j under a static energy process), fed as
+    the solver's per-element e_max operand.  Returns the per-sim RAResults
     and each sim's share of planning wall time (group time split
     proportionally to its pair count).
 
@@ -262,7 +321,8 @@ def _solve_horizons(
     # CPU model, ...) are baked into the closed forms — group by them.
     def solver_key(wcfg: WirelessConfig) -> WirelessConfig:
         return dataclasses.replace(
-            wcfg, n_devices=0, n_subchannels=0, radius_m=0.0, e_max_j=0.0)
+            wcfg, n_devices=0, n_subchannels=0, radius_m=0.0, e_max_j=0.0,
+            min_dist_m=1.0)
 
     groups: dict[WirelessConfig, list[int]] = {}
     for i, p in enumerate(preps):
@@ -276,7 +336,9 @@ def _solve_horizons(
                             preps[i].h2_all.shape).reshape(-1)
             for i in mo])
         emax_cat = np.concatenate([
-            np.full(preps[i].h2_all.size, preps[i].wcfg.e_max_j) for i in mo])
+            np.broadcast_to(preps[i].emax_all[:, None, :],
+                            preps[i].h2_all.shape).reshape(-1)
+            for i in mo])
         t0 = time.time()
         ra_flat = solve_pairs_jit(beta_cat, h2_cat, preps[mo[0]].wcfg,
                                   emax_cat, backend=backend)
@@ -301,7 +363,9 @@ def _solve_horizons(
     for i, p in enumerate(preps):
         if out[i] is None and dup_of[i] is None:
             t0 = time.time()
-            out[i] = fixed_ra(p.beta[None, None, :], p.h2_all, p.wcfg)
+            out[i] = fixed_ra(p.beta[None, None, :], p.h2_all, p.wcfg,
+                              np.broadcast_to(p.emax_all[:, None, :],
+                                              p.h2_all.shape))
             secs[i] = time.time() - t0
     for i, rep in enumerate(dup_of):
         if rep is not None:
@@ -600,19 +664,24 @@ def _history_from_scan(cfg: SimConfig, beta: np.ndarray, ys: dict,
 
 
 def _scan_group_key(cfg: SimConfig) -> SimConfig:
-    """Configs identical up to seed/wireless-data/policy fields share one
-    compiled scan program: policy.ra only selects which precomputed Γ is fed
-    in, and policy.ds/sa select a `lax.switch` leader branch inside the
-    shared program (DESIGN.md §10)."""
+    """Configs identical up to seed/wireless-data/policy/scenario fields
+    share one compiled scan program: policy.ra only selects which
+    precomputed Γ is fed in, policy.ds/sa select a `lax.switch` leader
+    branch inside the shared program (DESIGN.md §10), and a scenario only
+    changes the DATA flowing through the fixed-shape traces (channel
+    horizon, Prop-1 mask, budgets), never the program — so a policy x
+    scenario x seed grid is ONE compiled dispatch (DESIGN.md §11)."""
     return dataclasses.replace(
         cfg, seed=0, radius_m=0.0, pt_dbm=0.0, e_max_j=None,
-        policy=RoundPolicy())
+        policy=RoundPolicy(), scenario="static")
 
 
 def _prep_key(cfg: SimConfig) -> SimConfig:
     """Configs identical up to the policy sample the same `_Prepared` world:
-    dataset, partition, topology, channel horizon, and injected permutations
-    are all drawn from `seed` before the policy is ever consulted."""
+    dataset, partition, scenario traces (topology, channel horizon, churn,
+    budgets), and injected permutations are all drawn from `seed` before
+    the policy is ever consulted.  The scenario stays in the key — it IS
+    part of the world."""
     return dataclasses.replace(cfg, policy=RoundPolicy())
 
 
@@ -738,17 +807,33 @@ def run_many(cfgs: Sequence[SimConfig], *,
 
     # One _Prepared world per policy-free config: policy-only variants
     # share data/topology/channels by construction (and hence Γ, below).
+    # Scenario-only variants are distinct worlds but still share the
+    # dataset phase (dataset/partition/padded buffers) via `data_cache` —
+    # the rng prefix up to the partition draw is scenario-independent.
     preps_by_key: dict[SimConfig, _Prepared] = {}
+    data_cache: dict = {}
     preps: list[_Prepared] = []
     for c in cfgs:
         key = _prep_key(c)
         if key not in preps_by_key:
-            preps_by_key[key] = _prepare(c)
+            preps_by_key[key] = _prepare(c, data_cache)
         shared = preps_by_key[key]
         preps.append(shared if shared.cfg == c
                      else dataclasses.replace(shared, cfg=c))
 
     ras, plan_walls = _solve_horizons(preps, ra_backend)
+    # Scenario dynamics (DESIGN.md §11): churn availability knocks out
+    # Prop-1 feasibility, straggler slowdowns stretch the eq.-1 compute
+    # share of Γ — folded into the whole-horizon RAResult ONCE, before
+    # either engine runs, so loop and scan consume identical tensors.
+    # Γ-deduped sims alias one RAResult and one world, so the transform is
+    # applied per unique object and re-aliased.
+    transformed: dict[int, RAResult] = {}
+    for i, (p, ra) in enumerate(zip(preps, ras)):
+        if id(ra) not in transformed:
+            transformed[id(ra)] = apply_dynamics(
+                ra, p.avail, p.slowdown, p.beta, p.wcfg)
+        ras[i] = transformed[id(ra)]
     if engine == "loop":
         return [_run_prepared(p, ra, s) for p, ra, s in zip(preps, ras, plan_walls)]
 

@@ -1,0 +1,53 @@
+"""Scenario dynamics: time-varying wireless environments as trace generators.
+
+The paper's AoI/AoU-aware selection story only bites when the environment
+*changes* between rounds; this subsystem turns the single static world of
+the seed simulator into a pluggable layer of composable, seed-deterministic
+*environment processes* — temporally correlated fading, device mobility,
+churn/stragglers, and energy harvesting — that generate whole-horizon
+traces consumable by both round-loop engines unchanged (DESIGN.md §11).
+
+Public surface:
+  processes -- `FadingProcess` / `MobilityProcess` / `ChurnProcess` /
+               `EnergyProcess` configs and their pure
+               ``(rng, cfg, horizon) -> trace`` generators;
+  scenario  -- the `Scenario` bundle, the named-preset registry
+               (``static`` reproduces the legacy behavior bit-exactly),
+               `generate_traces`, and `apply_dynamics` (folds churn into
+               a solved whole-horizon `RAResult`).
+
+`fl.SimConfig(scenario=...)` and the `SweepSpec(scenarios=...)` axis are
+the consumer entry points; see examples/reproduce_figures.py --scenario.
+"""
+from .processes import (
+    ChurnProcess,
+    EnergyProcess,
+    FadingProcess,
+    MobilityProcess,
+    compose_gains,
+    sample_churn,
+    sample_distances,
+    sample_energy,
+    sample_fading,
+)
+from .scenario import (
+    PRESETS,
+    Scenario,
+    ScenarioTraces,
+    apply_dynamics,
+    generate_traces,
+    get_scenario,
+    register_scenario,
+    scenario_name,
+)
+
+__all__ = [
+    # process configs + generators
+    "FadingProcess", "MobilityProcess", "ChurnProcess", "EnergyProcess",
+    "sample_fading", "sample_distances", "sample_churn", "sample_energy",
+    "compose_gains",
+    # scenario bundle + registry
+    "Scenario", "ScenarioTraces", "PRESETS", "get_scenario",
+    "register_scenario", "scenario_name", "generate_traces",
+    "apply_dynamics",
+]

@@ -1,0 +1,103 @@
+"""Trace-statistics property tests for the scenario processes
+(hypothesis-guarded, following the tests/test_property_invariants.py
+convention: the whole module skips cleanly without hypothesis).
+
+Pins the distributional contracts documented in
+src/repro/scenarios/processes.py:
+
+  * AR(1) fading: |g|^2 stays Exp(1)-stationary (mean 1, variance 1) at
+    every lag while the POWER autocorrelation at lag 1 is rho^2 — and the
+    rho=0 special case is statistically indistinguishable from the
+    legacy i.i.d. draw (mean 1, no lag-1 correlation);
+  * Markov churn: the availability chain mixes to its stationary rate
+    p_join / (p_join + p_drop); straggler slowdowns appear at the
+    configured marginal rate and never below 1;
+  * harvest energy: budgets respect the floor and hit the configured
+    mean fraction of E^max.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
+from hypothesis import given, settings, strategies as st
+
+from repro.core import WirelessConfig
+from repro.scenarios import (
+    ChurnProcess,
+    EnergyProcess,
+    FadingProcess,
+    sample_churn,
+    sample_energy,
+    sample_fading,
+)
+
+CFG = WirelessConfig(n_devices=64, n_subchannels=4)
+
+
+def _lag1_power_corr(g2: np.ndarray) -> float:
+    """Empirical lag-1 correlation of |g|^2 pooled over all (k, n) chains."""
+    a = g2[:-1].reshape(-1)
+    b = g2[1:].reshape(-1)
+    return float(np.corrcoef(a, b)[0, 1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(rho=st.floats(0.0, 0.95), seed=st.integers(0, 999))
+def test_ar1_fading_moments_and_autocorrelation(rho, seed):
+    rng = np.random.default_rng(seed)
+    g2 = sample_fading(rng, CFG, FadingProcess("ar1", rho=rho), rounds=200)
+    n = g2.size
+    # Exp(1) marginals at every lag: mean 1, var 1 (3-sigma-ish bands for
+    # ~51k correlated samples; correlation inflates the estimator noise).
+    assert abs(g2.mean() - 1.0) < 0.15
+    assert abs(g2.var() - 1.0) < 0.35
+    # power autocorrelation: corr(|g_t|^2, |g_{t+1}|^2) = rho^2
+    assert abs(_lag1_power_corr(g2) - rho * rho) < 0.08
+    assert n == 200 * 4 * 64
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_iid_fading_is_uncorrelated_rho0_limit(seed):
+    """The legacy i.i.d. draw == the rho=0 AR(1) law, statistically."""
+    iid = sample_fading(np.random.default_rng(seed), CFG,
+                        FadingProcess("iid"), rounds=200)
+    ar0 = sample_fading(np.random.default_rng(seed), CFG,
+                        FadingProcess("ar1", rho=0.0), rounds=200)
+    for g2 in (iid, ar0):
+        assert abs(g2.mean() - 1.0) < 0.1
+        assert abs(_lag1_power_corr(g2)) < 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(p_drop=st.floats(0.05, 0.9), p_join=st.floats(0.1, 0.95),
+       straggler=st.floats(0.0, 0.8), seed=st.integers(0, 999))
+def test_churn_marginal_rates(p_drop, p_join, straggler, seed):
+    rounds, n = 400, 64
+    proc = ChurnProcess("markov", p_drop=p_drop, p_join=p_join,
+                        straggler_prob=straggler, slowdown_max=4.0)
+    avail, slow = sample_churn(np.random.default_rng(seed), proc, rounds, n)
+    assert avail[0].all()                       # chains start available
+    stationary = p_join / (p_join + p_drop)
+    # discard the burn-in half so the all-up start doesn't bias the rate
+    rate = avail[rounds // 2:].mean()
+    assert abs(rate - stationary) < 0.08
+    assert (slow >= 1.0).all() and (slow <= 4.0).all()
+    # stragglers appear only on available devices, at the marginal rate
+    assert ((slow > 1.0) <= avail).all()
+    if straggler > 0:
+        obs = (slow[avail] > 1.0).mean()
+        assert abs(obs - straggler) < 0.06
+
+
+@settings(max_examples=10, deadline=None)
+@given(mean_frac=st.floats(0.3, 2.0), floor_frac=st.floats(0.0, 0.25),
+       seed=st.integers(0, 999))
+def test_harvest_energy_floor_and_mean(mean_frac, floor_frac, seed):
+    proc = EnergyProcess("harvest", mean_frac=mean_frac,
+                         floor_frac=floor_frac)
+    e = sample_energy(np.random.default_rng(seed), CFG, proc, rounds=300)
+    assert e.shape == (300, CFG.n_devices)
+    assert (e >= floor_frac * CFG.e_max_j - 1e-15).all()
+    scale = mean_frac * CFG.e_max_j
+    assert abs(e.mean() - scale) < 0.05 * max(scale, CFG.e_max_j)

@@ -1,0 +1,323 @@
+"""Scenario-dynamics subsystem (repro.scenarios, DESIGN.md §11).
+
+Pins the layer's two load-bearing contracts:
+
+  * the ``static`` preset is BIT-EXACT with the pre-scenario simulator —
+    `_prepare` consumes the identical world rng stream (verified against a
+    hand-replicated legacy draw sequence) and both engines reproduce the
+    identical trajectories;
+  * every dynamic preset preserves the loop/scan/vmap differential
+    equivalence (the dynamics fold into the whole-horizon RAResult before
+    either engine runs, so the engines cannot diverge by construction) —
+    the tests/test_scan_equivalence.py convention extended to scenarios.
+
+Plus the plumbing: process validation, churn/harvest actually altering
+behavior, `apply_dynamics` arithmetic, the `min_dist_m` clamp, the
+SweepSpec scenario axis, and scenario-aware figure faceting.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    RoundPolicy,
+    WirelessConfig,
+    make_clusters,
+    sample_channel_gains,
+    sample_topology,
+    solve_pairs,
+)
+from repro.core.wireless import compute_energy, compute_time
+from repro.data.fl_datasets import make_dataset, partition_imbalanced_iid
+from repro.experiments import SweepSpec, facets
+from repro.fl import SimConfig, run_many, run_simulation
+from repro.fl.sim import _prepare, _scan_group_key
+from repro.scenarios import (
+    PRESETS,
+    ChurnProcess,
+    EnergyProcess,
+    FadingProcess,
+    MobilityProcess,
+    Scenario,
+    apply_dynamics,
+    generate_traces,
+    get_scenario,
+    register_scenario,
+    sample_distances,
+    scenario_name,
+)
+
+_SMALL = dict(rounds=5, n_devices=8, n_subchannels=3, n_samples=64,
+              batch=8, local_steps=2, eval_every=2)
+
+
+def _cfg(**kw):
+    base = dict(_SMALL)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# registry + process validation
+# --------------------------------------------------------------------------
+
+def test_registry_presets_resolve_and_reject_unknown():
+    assert set(PRESETS) >= {"static", "corr_fading", "mobility", "churn",
+                            "harvest", "urban"}
+    assert get_scenario("static").name == "static"
+    custom = Scenario("custom-x", fading=FadingProcess("ar1", rho=0.5))
+    assert get_scenario(custom) is custom      # objects pass through
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario("nope")
+    assert scenario_name("urban") == "urban" == scenario_name(PRESETS["urban"])
+
+
+def test_register_scenario_roundtrip():
+    scn = Scenario("test-registered", churn=ChurnProcess("markov", p_drop=0.2))
+    try:
+        register_scenario(scn)
+        assert get_scenario("test-registered") is scn
+        with pytest.raises(ValueError, match="already registered"):
+            register_scenario(Scenario("test-registered"))
+    finally:
+        PRESETS.pop("test-registered", None)
+
+
+def test_process_validation():
+    with pytest.raises(ValueError):
+        FadingProcess("weird")
+    with pytest.raises(ValueError):
+        FadingProcess("ar1", rho=1.0)          # must be < 1
+    with pytest.raises(ValueError):
+        MobilityProcess("waypoint", speed_mps=-1.0)
+    with pytest.raises(ValueError):
+        ChurnProcess("markov", p_drop=1.5)
+    with pytest.raises(ValueError):
+        ChurnProcess("markov", slowdown_max=0.5)   # speed-ups are forbidden
+    with pytest.raises(ValueError):
+        EnergyProcess("harvest", mean_frac=0.1, floor_frac=0.2)
+
+
+def test_min_dist_is_config_not_hardcode():
+    with pytest.raises(ValueError, match="min_dist_m"):
+        WirelessConfig(min_dist_m=0.0)
+    rng = np.random.default_rng(0)
+    cfg = WirelessConfig(n_devices=50, radius_m=5.0, min_dist_m=20.0)
+    topo = sample_topology(rng, cfg)
+    assert (topo.distances_m == 20.0).all()    # clamp floor wins everywhere
+    d = sample_distances(np.random.default_rng(0), cfg,
+                         MobilityProcess("waypoint", speed_mps=3.0), 30)
+    assert (d >= 20.0).all()                   # mobility cannot tunnel below
+
+
+# --------------------------------------------------------------------------
+# the static preset is bit-exact with the legacy inline sampler
+# --------------------------------------------------------------------------
+
+def test_static_prepare_replays_legacy_stream_bitwise():
+    """`_prepare(scenario='static')` must consume the world rng EXACTLY as
+    the pre-scenario code did (topology draw, per-round channel draws,
+    permutations — in that order) and its churn/energy traces must consume
+    nothing."""
+    cfg = _cfg()
+    prep = _prepare(cfg)
+
+    rng = np.random.default_rng(cfg.seed)      # legacy draw sequence, by hand
+    wcfg = cfg.wireless()
+    ds = make_dataset(cfg.dataset, rng, n=cfg.n_samples)
+    partition_imbalanced_iid(rng, ds.n, cfg.n_devices)
+    topo = sample_topology(rng, wcfg)
+    clusters = make_clusters(cfg.n_devices, cfg.n_subchannels, rng)
+    fixed_ids = rng.permutation(cfg.n_devices)[: cfg.n_subchannels]
+    h2_all = np.stack([sample_channel_gains(rng, wcfg, topo)
+                       for _ in range(cfg.rounds)])
+    sel = np.stack([rng.permutation(cfg.n_devices) for _ in range(cfg.rounds)])
+    asg = np.stack([rng.permutation(cfg.n_subchannels)
+                    for _ in range(cfg.rounds)])
+
+    np.testing.assert_array_equal(prep.h2_all, h2_all)
+    np.testing.assert_array_equal(prep.clusters, clusters)
+    np.testing.assert_array_equal(prep.fixed_ids, fixed_ids)
+    np.testing.assert_array_equal(prep.sel_perms, sel)
+    np.testing.assert_array_equal(prep.assign_perms, asg)
+    np.testing.assert_array_equal(prep.distances,
+                                  np.broadcast_to(topo.distances_m,
+                                                  (cfg.rounds, cfg.n_devices)))
+    assert prep.avail.all() and (prep.slowdown == 1.0).all()
+    assert (prep.emax_all == wcfg.e_max_j).all()
+
+
+def test_static_preset_identical_across_engines_and_vmap():
+    """scenario='static' trajectories: loop == scan == vmapped run_many,
+    bit-identical tx/AoU (the acceptance differential)."""
+    cfgs = [_cfg(seed=s, scenario="static") for s in (0, 1)]
+    loop = run_many(cfgs, engine="loop")
+    solo = [run_simulation(c, engine="scan") for c in cfgs]
+    vmapped = run_many(cfgs, engine="scan")
+    for l, s, v in zip(loop, solo, vmapped):
+        np.testing.assert_array_equal(l.tx_trace, s.tx_trace)
+        np.testing.assert_array_equal(l.tx_trace, v.tx_trace)
+        np.testing.assert_array_equal(l.age_trace, v.age_trace)
+        np.testing.assert_allclose(l.latency_all, v.latency_all,
+                                   rtol=1e-5, atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# dynamic scenarios: engine equivalence + the dynamics actually bite
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", ["corr_fading", "mobility", "churn",
+                                    "harvest", "urban"])
+def test_dynamic_presets_loop_scan_equivalent(preset):
+    cfg = _cfg(scenario=preset)
+    a = run_simulation(cfg, engine="loop")
+    b = run_simulation(cfg, engine="scan")
+    np.testing.assert_array_equal(a.tx_trace, b.tx_trace)
+    np.testing.assert_array_equal(a.age_trace, b.age_trace)
+    np.testing.assert_allclose(a.latency_all, b.latency_all,
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(a.energy_all, b.energy_all,
+                               rtol=1e-5, atol=1e-9)
+
+
+@pytest.mark.slow
+def test_dynamic_scenario_vmap_matches_solo():
+    cfgs = [_cfg(seed=s, scenario="urban") for s in (0, 1, 2)]
+    vmapped = run_many(cfgs, engine="scan")
+    for c, v in zip(cfgs, vmapped):
+        s = run_simulation(c, engine="scan")
+        np.testing.assert_array_equal(v.tx_trace, s.tx_trace)
+        np.testing.assert_allclose(v.global_loss, s.global_loss, rtol=1e-4)
+
+
+def test_churn_knocks_out_devices_and_harvest_tightens_budgets():
+    base = _cfg(rounds=8)
+    harsh = Scenario("harsh-churn",
+                     churn=ChurnProcess("markov", p_drop=0.6, p_join=0.2))
+    tight = Scenario("tight-energy",
+                     energy=EnergyProcess("harvest", mean_frac=0.25,
+                                          floor_frac=0.01))
+    h_static = run_simulation(base)
+    h_churn = run_simulation(dataclasses.replace(base, scenario=harsh))
+    h_tight = run_simulation(dataclasses.replace(base, scenario=tight))
+    assert h_churn.tx_trace.sum() < h_static.tx_trace.sum()
+    # An unavailable device never transmits even if its channel is great.
+    prep = _prepare(dataclasses.replace(base, scenario=harsh))
+    assert not h_churn.tx_trace[~prep.avail].any()
+    # Tighter harvested budgets strictly reduce Prop-1 feasibility odds;
+    # with mean 25% of Table-I E^max some rounds must lose transmitters.
+    assert h_tight.tx_trace.sum() < h_static.tx_trace.sum()
+
+
+def test_apply_dynamics_arithmetic_and_identity():
+    rng = np.random.default_rng(0)
+    cfg = WirelessConfig(n_devices=6, n_subchannels=2)
+    topo = sample_topology(rng, cfg)
+    h2 = np.stack([sample_channel_gains(rng, cfg, topo) for _ in range(3)])
+    beta = rng.integers(5, 40, 6).astype(float)
+    ra = solve_pairs(beta[None, None], h2, cfg)
+
+    # churn-free: the IDENTITY, not a numeric round-trip
+    ones_a = np.ones((3, 6), bool)
+    ones_s = np.ones((3, 6))
+    assert apply_dynamics(ra, ones_a, ones_s, beta, cfg) is ra
+
+    avail = ones_a.copy(); avail[1, 2] = False
+    slow = ones_s.copy(); slow[0, :] = 2.5
+    ra2 = apply_dynamics(ra, avail, slow, beta, cfg)
+    # availability: all of the dropped device's pairs become infeasible
+    assert not ra2.feasible[1, :, 2].any()
+    assert np.isinf(ra2.time_s[1, :, 2]).all()
+    # slowdown s: T' - T = (s-1) T^cp(tau*), E' - E = (1/s^2 - 1) E^cp(tau*)
+    m = ra2.feasible[0]
+    bb = np.broadcast_to(beta, ra.tau[0].shape)
+    t_cp = compute_time(ra.tau[0], bb, cfg)
+    e_cp = compute_energy(ra.tau[0], bb, cfg)
+    np.testing.assert_allclose(ra2.time_s[0][m] - ra.time_s[0][m],
+                               1.5 * t_cp[m], rtol=1e-12)
+    np.testing.assert_allclose(ra2.energy_j[0][m] - ra.energy_j[0][m],
+                               (1 / 2.5**2 - 1) * e_cp[m], rtol=1e-12)
+    # DVFS at a slower clock only FREES budget — feasibility stays valid
+    assert (ra2.energy_j[0][m] <= ra.energy_j[0][m] + 1e-15).all()
+    # untouched rounds pass through numerically unchanged
+    np.testing.assert_array_equal(ra2.time_s[2], ra.time_s[2])
+
+
+def test_generate_traces_deterministic_and_shaped():
+    cfg = WirelessConfig(n_devices=10, n_subchannels=3)
+    a = generate_traces(7, cfg, "urban", 20)
+    b = generate_traces(np.random.default_rng(7), cfg, "urban", 20)
+    np.testing.assert_array_equal(a.h2_all, b.h2_all)
+    np.testing.assert_array_equal(a.avail, b.avail)
+    np.testing.assert_array_equal(a.e_max_j, b.e_max_j)
+    assert a.h2_all.shape == (20, 3, 10)
+    assert a.distances_m.shape == a.avail.shape == (20, 10)
+    assert (a.h2_all > 0).all() and (a.slowdown >= 1.0).all()
+    # waypoint walkers stay on the disc, move at most one step per round
+    step = PRESETS["urban"].mobility.speed_mps * PRESETS["urban"].mobility.round_s
+    assert (a.distances_m <= cfg.radius_m + 1e-9).all()
+    assert (np.abs(np.diff(a.distances_m, axis=0)) <= step + 1e-9).all()
+
+
+# --------------------------------------------------------------------------
+# sweep harness: the scenario axis
+# --------------------------------------------------------------------------
+
+def test_spec_scenario_axis_ids_and_grouping():
+    spec = SweepSpec(name="t", datasets="mnist", ds=("alg3", "random"),
+                     scenarios=("static", "corr_fading"), seeds=(0, 1),
+                     rounds=4, n_devices=8, n_subchannels=3,
+                     overrides={"n_samples": 32})
+    cells = spec.cells()
+    assert spec.n_cells == len(cells) == 8
+    # static cells keep the PRE-scenario id format (committed artifacts
+    # from earlier PRs remain addressable); others gain a scenario segment
+    assert cells[0].cell_id == "mnist-N8-K3-alg3.mo.matching-s0"
+    assert cells[4].cell_id == "mnist-N8-K3-corr_fading-alg3.mo.matching-s0"
+    assert len({c.cell_id for c in cells}) == 8
+    assert {c.config.scenario for c in cells} == {"static", "corr_fading"}
+    # the whole policy x scenario x seed grid is ONE compiled program
+    assert len({_scan_group_key(c.config) for c in cells}) == 1
+    # round-trips through JSON with the scenario axis intact
+    assert SweepSpec.from_json(spec.to_json()) == spec
+
+
+def test_scenario_grid_cells_bit_identical_to_solo():
+    """A policy x scenario grid through grouped run_many == solo
+    run_simulation per cell — exercising the shared-dataset-phase cache
+    (`_prepare`'s rng branch-point replay) and the grouped dispatch."""
+    cfgs = [_cfg(rounds=4, policy=RoundPolicy(ds=d), scenario=sc, seed=s)
+            for sc in ("static", "corr_fading")
+            for d in ("alg3", "random") for s in (0,)]
+    grid = run_many(cfgs, engine="scan")
+    for c, g in zip(cfgs, grid):
+        solo = run_simulation(c, engine="scan")
+        np.testing.assert_array_equal(g.tx_trace, solo.tx_trace)
+        np.testing.assert_array_equal(g.age_trace, solo.age_trace)
+        np.testing.assert_array_equal(g.global_loss, solo.global_loss)
+
+
+def test_spec_rejects_bad_scenarios():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        SweepSpec(name="t", scenarios=("static", "wat"))
+    with pytest.raises(ValueError):           # scenario is an axis, not an
+        SweepSpec(name="t", overrides={"scenario": "urban"})   # override
+
+
+def test_facets_split_on_scenario_and_default_old_records_to_static():
+    def cell(sc=None, ds="alg3"):
+        c = {"dataset": "mnist", "n_devices": 8, "n_subchannels": 3,
+             "policy": {"ds": ds, "ra": "mo", "sa": "matching"}}
+        if sc is not None:
+            c["scenario"] = sc
+        return c
+
+    rec = {"cells": [cell("static"), cell("urban"), cell(None, ds="random")]}
+    fs = facets(rec)
+    assert sorted(f.scenario for f in fs) == ["static", "urban"]
+    by_sc = {f.scenario: f for f in fs}
+    # the scenario-less legacy cell facets together with "static"
+    assert by_sc["static"].matches(cell(None, ds="random"))
+    assert not by_sc["urban"].matches(cell("static"))
+    assert by_sc["urban"].suffix == "mnist-urban"
