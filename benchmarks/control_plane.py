@@ -26,6 +26,13 @@ the perf trajectory is machine-readable across PRs.  Acceptance rows:
     acceptance gate — trace generation is host-side numpy and runs once
     per world — but recorded so regressions in the dynamic path show up
     in the perf trajectory.
+  * `async_event_loop` — the buffered event engine (DESIGN.md §12) on
+    the same 8-seed sweep as `run_many/scan`: events/sec vs the sync
+    engine's rounds/sec (an event carries the extra buffer state in its
+    scan carry, so the ratio records the async engine's overhead), plus
+    a one-rep full-buffer run pinning the degenerate limit's transmitted
+    sets against the scan engine at benchmark scale.  Recorded, not
+    gated.
 """
 from __future__ import annotations
 
@@ -160,6 +167,37 @@ def run(json_path: str | None = None):
         "loop_s_all": times["loop"], "scan_s_all": times["scan"],
         "speedup": sweep_speedup, "tx_traces_agree": bool(tx_agree),
         "target_speedup": 3.0, "meets_target": bool(sweep_speedup >= 3.0),
+    }
+
+    # ---- async event engine: events/sec vs sync rounds/sec ----------------
+    acfgs = [SimConfig(seed=s, policy=RoundPolicy(ra="fix"),
+                       aggregation="async", **SWEEP_CFG)
+             for s in range(SWEEP_SEEDS)]
+    t_async = []
+    for _ in range(SWEEP_REPS):
+        t0 = time.time()
+        run_many(acfgs, engine="async")
+        t_async.append(time.time() - t0)
+    ta = min(t_async)
+    events = SWEEP_SEEDS * SWEEP_CFG["rounds"]
+    # Degenerate-limit anchor at benchmark scale: full buffer == scan.
+    fcfgs = [SimConfig(seed=s, policy=RoundPolicy(ra="fix"),
+                       aggregation="async_full", **SWEEP_CFG)
+             for s in range(SWEEP_SEEDS)]
+    fhists = run_many(fcfgs, engine="async")
+    anchor = all(np.array_equal(f.tx_trace, h.tx_trace)
+                 for f, h in zip(fhists, hists["scan"]))
+    ev_per_s = events / ta
+    sync_r_per_s = events / t_scan
+    rows.append([f"async_event_loop/seeds{SWEEP_SEEDS}", round(ta * 1e6, 1),
+                 f"{ev_per_s:.1f} ev/s vs {sync_r_per_s:.1f} sync r/s, "
+                 f"anchor={anchor}"])
+    record["async_event_loop"] = {
+        "seeds": SWEEP_SEEDS, "reps": SWEEP_REPS, **SWEEP_CFG,
+        "async_s": ta, "async_s_all": t_async,
+        "events_per_s": ev_per_s, "sync_rounds_per_s": sync_r_per_s,
+        "events_per_sync_round": ev_per_s / sync_r_per_s,
+        "full_buffer_anchor_tx_agree": bool(anchor),
     }
 
     # ---- acceptance: 8-config policy x seed grid vs solo-call loop --------

@@ -22,6 +22,17 @@ x seed grid still dispatches as one compiled scan program:
   PYTHONPATH=src python examples/reproduce_figures.py \
       --name scenario_robustness --scenario static --scenario corr_fading
 
+Sync-vs-async server disciplines (DESIGN.md §12): pass one or more
+--aggregation presets (sync / async / async_const / async_full) to add
+the server-aggregation axis — async cells share the sync cells' worlds
+and Γ solves and route through the buffered event engine, and the
+gallery gains the time-to-target comparison figure:
+
+  PYTHONPATH=src python examples/reproduce_figures.py \
+      --name async_vs_sync --ds alg3 \
+      --aggregation sync --aggregation async \
+      --scenario static --scenario churn --scenario urban
+
 Every run appends a NEW version directory; RESULTS.md documents the
 gallery generated from these artifacts.
 """
@@ -33,24 +44,28 @@ from repro.experiments import SweepSpec, run_sweep
 
 def build_spec(args: argparse.Namespace) -> SweepSpec:
     scenarios = tuple(args.scenario) if args.scenario else ("static",)
+    aggregation = tuple(args.aggregation) if args.aggregation else ("sync",)
     if args.smoke:       # CI: 2 policies x 2 seeds, minutes on 2 CPU cores
         return SweepSpec(
-            name=args.name, datasets="mnist", ds=("alg3", "random"),
-            scenarios=scenarios,
+            name=args.name, datasets="mnist",
+            ds=tuple(args.ds) if args.ds else ("alg3", "random"),
+            scenarios=scenarios, aggregation=aggregation,
             seeds=(0, 1), rounds=12, n_devices=12, n_subchannels=4,
             target_loss=args.target_loss,
             overrides={"n_samples": 128, "batch": 16, "eval_every": 3,
                        "local_steps": 2})
     if args.full:        # paper scale (Table I / Sec. VI)
         return SweepSpec(
-            name=args.name, datasets="mnist", ds=PAPER_BASELINE_DS,
-            scenarios=scenarios,
+            name=args.name, datasets="mnist",
+            ds=tuple(args.ds) if args.ds else PAPER_BASELINE_DS,
+            scenarios=scenarios, aggregation=aggregation,
             seeds=tuple(range(args.seeds)), rounds=300,
             n_devices=20, n_subchannels=4, target_loss=args.target_loss)
     # default: reduced scale, same scheme ordering (DESIGN.md §2)
     return SweepSpec(
-        name=args.name, datasets="mnist", ds=PAPER_BASELINE_DS,
-        scenarios=scenarios,
+        name=args.name, datasets="mnist",
+        ds=tuple(args.ds) if args.ds else PAPER_BASELINE_DS,
+        scenarios=scenarios, aggregation=aggregation,
         seeds=tuple(range(args.seeds)), rounds=60,
         n_devices=20, n_subchannels=4, target_loss=args.target_loss,
         overrides={"n_samples": 500, "eval_every": 5})
@@ -73,13 +88,21 @@ def main() -> None:
                     metavar="PRESET",
                     help="environment scenario preset (repeatable; adds a "
                          "scenario axis to the grid — see repro.scenarios)")
+    ap.add_argument("--aggregation", action="append", default=None,
+                    metavar="PRESET",
+                    help="server-aggregation preset (repeatable; sync / "
+                         "async / async_const / async_full — async cells "
+                         "run the buffered event engine, DESIGN.md §12)")
+    ap.add_argument("--ds", action="append", default=None, metavar="SCHEME",
+                    help="device-selection scheme axis override "
+                         "(repeatable; default: the per-mode policy grid)")
     args = ap.parse_args()
 
     spec = build_spec(args)
     print(f"sweep {spec.name!r}: {spec.n_cells} cells "
           f"({len(spec.policies)} policies x {len(spec.scenarios)} scenarios "
-          f"x {len(spec.seeds)} seeds), "
-          f"{spec.rounds} rounds, engine={args.engine}")
+          f"x {len(spec.aggregation)} aggregations x {len(spec.seeds)} "
+          f"seeds), {spec.rounds} rounds, engine={args.engine}")
     res = run_sweep(spec, engine=args.engine,
                     results_root=args.results_root, figures=True)
     print(f"wrote {res.out_dir}/sweep.json "
@@ -89,10 +112,13 @@ def main() -> None:
           f"{'util':>6s} {'cum lat (s)':>12s}")
     rows: dict[str, list[dict]] = {}
     many_sc = len(spec.scenarios) > 1
+    many_ag = len(spec.aggregation) > 1
     for c in res.record["cells"]:
         label = c["policy"]["label"]
         if many_sc:   # never pool metrics across environments
             label = f"{label} @{c['scenario']}"
+        if many_ag:   # ... nor across server disciplines
+            label = f"{label} [{c['aggregation']}]"
         rows.setdefault(label, []).append(c["metrics"])
     for label, ms in rows.items():
         import numpy as np

@@ -2,18 +2,21 @@
 
 Public surface:
   SweepSpec / SweepCell -- declarative grids over the Sec.-VI comparison
-                           axes (policies, datasets, N/K, seeds), expanded
-                           to `SimConfig` cells with stable artifact ids;
+                           axes (policies, datasets, N/K, scenarios,
+                           server aggregation, seeds), expanded to
+                           `SimConfig` cells with stable artifact ids;
   run_sweep / SweepResult -- dispatch a spec through the vmapped/sharded
                            scan engine and derive the paper metrics;
   metrics                -- rounds/time-to-target-loss, sub-channel
                            utilization, cumulative latency;
   store                  -- versioned JSON artifacts under ``results/``;
   figures / render_gallery -- SVG convergence curves, utilization bars,
-                           and latency CDFs rendered from artifacts.
+                           latency CDFs, and the sync-vs-async
+                           time-to-target comparison, rendered from
+                           artifacts.
 
-See DESIGN.md §10 and ``examples/reproduce_figures.py`` for the
-end-to-end reproduction entry point.
+See DESIGN.md §10, §12 and ``examples/reproduce_figures.py`` for the
+end-to-end reproduction entry points.
 """
 from .metrics import (
     cumulative_latency_s,
@@ -23,7 +26,15 @@ from .metrics import (
     summarize_cell,
     time_to_target_s,
 )
-from .figures import Facet, POLICY_COLORS, POLICY_NAMES, facets, render_gallery
+from .figures import (
+    AGG_COLORS,
+    Facet,
+    POLICY_COLORS,
+    POLICY_NAMES,
+    facets,
+    fig_time_to_target,
+    render_gallery,
+)
 from .runner import SweepResult, group_mean_curves, run_sweep
 from .spec import SweepCell, SweepSpec
 from .store import latest_dir, load_latest, load_record, write_record
@@ -46,7 +57,9 @@ __all__ = [
     "write_record",
     "POLICY_COLORS",
     "POLICY_NAMES",
+    "AGG_COLORS",
     "Facet",
     "facets",
     "render_gallery",
+    "fig_time_to_target",
 ]

@@ -30,9 +30,9 @@ import numpy as np
 
 from .svg import Series, bar_chart, line_chart
 
-__all__ = ["POLICY_COLORS", "POLICY_NAMES", "Facet", "facets",
+__all__ = ["POLICY_COLORS", "POLICY_NAMES", "AGG_COLORS", "Facet", "facets",
            "render_gallery", "fig_convergence", "fig_utilization",
-           "fig_latency_cdf"]
+           "fig_latency_cdf", "fig_time_to_target"]
 
 # Fixed entity -> categorical-slot assignment (light-mode steps).
 POLICY_COLORS = {
@@ -52,13 +52,24 @@ POLICY_NAMES = {
 # Stable legend/bar order: proposed first, then the Sec.-VI baselines.
 _DS_ORDER = list(POLICY_COLORS)
 
+# Server-aggregation entity colors (DESIGN.md §12): the paper's sync
+# barrier keeps the proposed-scheme blue; async commit policies own fixed
+# slots of the same categorical palette.
+AGG_COLORS = {
+    "sync": "#2a78d6",        # slot 1, blue   — eq.-34 round barrier
+    "async": "#eb6834",       # slot 2, orange — buffered, poly staleness
+    "async_const": "#eda100", # slot 4, yellow — buffered, constant weights
+    "async_full": "#1baf7a",  # slot 3, aqua   — full barrier (sync limit)
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class Facet:
     """One homogeneous slice of a record: everything but ds scheme and
-    seed is fixed, so seed-averaging within it is meaningful.  Scenario is
-    a facet key — pooling different environments into one curve would
-    fabricate a world that was never simulated."""
+    seed is fixed, so seed-averaging within it is meaningful.  Scenario
+    and aggregation are facet keys — pooling different environments or
+    server disciplines into one curve would fabricate a run that was
+    never simulated."""
 
     dataset: str
     n_devices: int
@@ -66,7 +77,8 @@ class Facet:
     ra: str
     sa: str
     scenario: str
-    suffix: str    # filename suffix ("mnist", "mnist-urban", ...)
+    aggregation: str
+    suffix: str    # filename suffix ("mnist", "mnist-urban-async", ...)
 
     def matches(self, cell: dict) -> bool:
         return (cell["dataset"] == self.dataset
@@ -74,24 +86,27 @@ class Facet:
                 and cell["n_subchannels"] == self.n_subchannels
                 and cell["policy"]["ra"] == self.ra
                 and cell["policy"]["sa"] == self.sa
-                and cell.get("scenario", "static") == self.scenario)
+                and cell.get("scenario", "static") == self.scenario
+                and cell.get("aggregation", "sync") == self.aggregation)
 
 
 def facets(record: dict) -> list[Facet]:
-    """Distinct (dataset, N, K, ra, sa, scenario) slices, with minimal
-    suffixes: shape/scheme/scenario parts appear only when the record
-    actually varies them.  (Pre-scenario artifacts carry no "scenario"
-    key; those cells facet as "static".)"""
+    """Distinct (dataset, N, K, ra, sa, scenario, aggregation) slices,
+    with minimal suffixes: shape/scheme/scenario/aggregation parts appear
+    only when the record actually varies them.  (Older artifacts carry no
+    "scenario"/"aggregation" keys; those cells facet as static/sync.)"""
     keys = sorted({(c["dataset"], c["n_devices"], c["n_subchannels"],
                     c["policy"]["ra"], c["policy"]["sa"],
-                    c.get("scenario", "static"))
+                    c.get("scenario", "static"),
+                    c.get("aggregation", "sync"))
                    for c in record["cells"]})
     many_shapes = len({(d, n, k) for d, n, k, *_ in keys}) > len(
         {d for d, *_ in keys})
-    many_schemes = len({(r, s) for _, _, _, r, s, _ in keys}) > 1
-    many_scenarios = len({sc for *_, sc in keys}) > 1
+    many_schemes = len({(r, s) for _, _, _, r, s, *_ in keys}) > 1
+    many_scenarios = len({sc for *_, sc, _ in keys}) > 1
+    many_aggs = len({ag for *_, ag in keys}) > 1
     out = []
-    for d, n, k, r, s, sc in keys:
+    for d, n, k, r, s, sc, ag in keys:
         suffix = d
         if many_shapes:
             suffix += f"-N{n}-K{k}"
@@ -99,7 +114,9 @@ def facets(record: dict) -> list[Facet]:
             suffix += f"-{r}.{s}"
         if many_scenarios:
             suffix += f"-{sc}"
-        out.append(Facet(d, n, k, r, s, sc, suffix))
+        if many_aggs:
+            suffix += f"-{ag}"
+        out.append(Facet(d, n, k, r, s, sc, ag, suffix))
     return out
 
 
@@ -166,6 +183,59 @@ def fig_latency_cdf(record: dict, facet: Facet, out_dir: Path) -> Path:
         ylabel="P(latency ≤ x)", ylim=(0.0, 1.04))
 
 
+def fig_time_to_target(record: dict, out_dir: Path,
+                       ds: str | None = None) -> Path | None:
+    """Simulated time-to-target per (scenario, aggregation) — the async
+    engine's headline comparison (DESIGN.md §12): how fast each server
+    discipline reaches the target loss in eq.-9 simulated seconds, per
+    environment.  Bars are seed-averaged for ONE ds scheme (the proposed
+    Algorithm 3 when present); a (scenario, aggregation) group where any
+    seed misses the target renders no bar.  Returns None when the record
+    fixes the aggregation axis, carries no time-to-target metric, or
+    still varies dataset / N / K / ra / sa within the chosen ds — the
+    no-pooling invariant of `Facet` applies here too: only seeds are
+    ever averaged into a bar.
+    """
+    cells = record["cells"]
+    aggs = sorted({c.get("aggregation", "sync") for c in cells})
+    if len(aggs) < 2:
+        return None
+    if ds is None:
+        present = {c["policy"]["ds"] for c in cells}
+        ds = "alg3" if "alg3" in present else sorted(present)[0]
+    slices = {(c["dataset"], c["n_devices"], c["n_subchannels"],
+               c["policy"]["ra"], c["policy"]["sa"])
+              for c in cells if c["policy"]["ds"] == ds}
+    if len(slices) != 1:
+        return None    # heterogeneous configs: refuse, never pool
+    groups: dict[tuple[str, str], list] = {}
+    for c in cells:
+        if c["policy"]["ds"] != ds:
+            continue
+        key = (c.get("scenario", "static"), c.get("aggregation", "sync"))
+        groups.setdefault(key, []).append(
+            c["metrics"].get("time_to_target_s"))
+    scenarios = sorted({sc for sc, _ in groups})
+    agg_order = [a for a in AGG_COLORS if a in aggs] + [
+        a for a in aggs if a not in AGG_COLORS]
+    labels, values, colors = [], [], []
+    for sc in scenarios:
+        for ag in agg_order:
+            ts = groups.get((sc, ag))
+            if not ts or any(t is None for t in ts):
+                continue
+            labels.append(f"{sc} · {ag}")
+            values.append(float(np.mean(ts)))
+            colors.append(AGG_COLORS.get(ag, "#8a8f98"))
+    if not values:
+        return None
+    return bar_chart(
+        labels, values, colors, out_dir / f"time_to_target_{ds}.svg",
+        title=f"Simulated time to target loss — {ds}, sync vs async",
+        ylabel="time to target (s, eq. 9 cumulative)",
+        value_fmt=lambda v: f"{v:.1f}")
+
+
 def render_gallery(record: dict, out_dir: str | Path) -> list[Path]:
     """All figures for every facet of a record; returns written paths."""
     out_dir = Path(out_dir)
@@ -175,4 +245,7 @@ def render_gallery(record: dict, out_dir: str | Path) -> list[Path]:
         paths.append(fig_convergence(record, facet, out_dir, "time"))
         paths.append(fig_utilization(record, facet, out_dir))
         paths.append(fig_latency_cdf(record, facet, out_dir))
+    t2t = fig_time_to_target(record, out_dir)
+    if t2t is not None:
+        paths.append(t2t)
     return paths

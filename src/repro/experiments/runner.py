@@ -58,6 +58,8 @@ def _cell_record(cell: SweepCell, hist: SimHistory,
         "n_devices": cfg.n_devices,
         "n_subchannels": cfg.n_subchannels,
         "scenario": scenario_name(cfg.scenario),
+        "aggregation": (cfg.aggregation if isinstance(cfg.aggregation, str)
+                        else "custom"),
         "seed": cfg.seed,
         "policy": {"ds": cfg.policy.ds, "ra": cfg.policy.ra,
                    "sa": cfg.policy.sa, "label": cfg.policy.label},
@@ -135,15 +137,16 @@ def group_mean_curves(record: dict, *, dataset: str | None = None,
                       n_devices: int | None = None,
                       n_subchannels: int | None = None,
                       scenario: str | None = None,
+                      aggregation: str | None = None,
                       key: str = "global_loss") -> dict[str, tuple]:
     """Average a per-cell eval curve over SEEDS, per policy label.
 
     Returns {policy_label: (rounds, mean_curve)} for cells matching the
-    given dataset / N / K / scenario (each None = the record's only
-    value; raises if the record varies an unfiltered axis, so
-    heterogeneous configs are never silently pooled into one curve).  The
-    label is the full ds+ra+sa scheme name, so distinct policies never
-    merge either.
+    given dataset / N / K / scenario / aggregation (each None = the
+    record's only value; raises if the record varies an unfiltered axis,
+    so heterogeneous configs are never silently pooled into one curve).
+    The label is the full ds+ra+sa scheme name, so distinct policies
+    never merge either.
     """
     cells = record["cells"]
 
@@ -162,12 +165,15 @@ def group_mean_curves(record: dict, *, dataset: str | None = None,
                             lambda c: c["n_subchannels"])
     scenario = resolve("scenario", scenario,
                        lambda c: c.get("scenario", "static"))
+    aggregation = resolve("aggregation", aggregation,
+                          lambda c: c.get("aggregation", "sync"))
     by_label: dict[str, list] = {}
     rounds_by_label: dict[str, Sequence[int]] = {}
     for c in cells:
         if (c["dataset"], c["n_devices"], c["n_subchannels"],
-                c.get("scenario", "static")) != (
-                dataset, n_devices, n_subchannels, scenario):
+                c.get("scenario", "static"),
+                c.get("aggregation", "sync")) != (
+                dataset, n_devices, n_subchannels, scenario, aggregation):
             continue
         lab = c["policy"]["label"]
         by_label.setdefault(lab, []).append(c["curves"][key])

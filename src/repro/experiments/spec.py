@@ -22,6 +22,7 @@ import re
 from typing import Any, Sequence
 
 from ..core.stackelberg import RoundPolicy, policy_grid
+from ..fl.server import get_aggregation
 from ..fl.sim import SimConfig
 from ..scenarios import Scenario, get_scenario
 
@@ -33,7 +34,7 @@ _NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
 _OVERRIDABLE = frozenset(
     f.name for f in dataclasses.fields(SimConfig)
     if f.name not in ("dataset", "n_devices", "n_subchannels", "seed",
-                      "policy", "rounds", "scenario"))
+                      "policy", "rounds", "scenario", "aggregation"))
 
 
 def _axis(v) -> tuple:
@@ -68,8 +69,15 @@ class SweepSpec:
         Scenarios vary only trace data, never program shape, so a
         policy x scenario x seed grid still dispatches as ONE compiled
         scan program per shape (DESIGN.md §11).
-      seeds: world seeds; cells differing only in policy share one sampled
-        world and one Γ solve (`fl.run_many` dedups them).
+      aggregation: server-aggregation axis, by preset name ("sync" =
+        the paper's eq.-34 round barrier; "async" / "async_const" /
+        "async_full" = the buffered staleness-weighted event engine,
+        `fl.AGGREGATION_PRESETS`, DESIGN.md §12).  Async cells route
+        through `engine="async"` automatically and SHARE the sync cells'
+        sampled worlds and Γ solves, so the comparison is differential.
+      seeds: world seeds; cells differing only in policy or aggregation
+        share one sampled world and one Γ solve (`fl.run_many` dedups
+        them).
       rounds: communication rounds per cell (scalar — part of the compiled
         scan shape, so it is not a grid axis).
       target_loss: global-loss threshold used by the derived
@@ -87,6 +95,7 @@ class SweepSpec:
     n_devices: Sequence[int] = (20,)
     n_subchannels: Sequence[int] = (4,)
     scenarios: Sequence[str] = ("static",)
+    aggregation: Sequence[str] = ("sync",)
     seeds: Sequence[int] = (0,)
     rounds: int = 100
     target_loss: float | None = None
@@ -123,12 +132,21 @@ class SweepSpec:
         object.__setattr__(self, "scenarios",
                            tuple(norm(s) for s in sc_axis))
         for field in ("datasets", "ds", "ra", "sa", "n_devices",
-                      "n_subchannels", "scenarios", "seeds"):
+                      "n_subchannels", "scenarios", "aggregation", "seeds"):
             object.__setattr__(self, field, _axis(getattr(self, field)))
         for sc in self.scenarios:   # validate eagerly: known AND path-safe
             get_scenario(sc)        # (names flow into cell ids + filenames)
             if not _NAME_RE.match(sc):
                 raise ValueError(f"scenario name not path-safe: {sc!r}")
+        for agg in self.aggregation:   # presets only: specs stay JSON-safe
+            if not isinstance(agg, str):
+                raise ValueError(
+                    f"aggregation axis values must be preset names, got "
+                    f"{agg!r} — register custom AsyncAggregation specs via "
+                    f"fl.AGGREGATION_PRESETS")
+            get_aggregation(agg)
+            if not _NAME_RE.match(agg):
+                raise ValueError(f"aggregation name not path-safe: {agg!r}")
         ov = self.overrides
         ov = tuple(sorted(ov.items())) if isinstance(ov, dict) else tuple(
             (str(k), v) for k, v in ov)
@@ -150,13 +168,16 @@ class SweepSpec:
     def n_cells(self) -> int:
         return (len(self.datasets) * len(self.n_devices)
                 * len(self.n_subchannels) * len(self.scenarios)
-                * len(self.policies) * len(self.seeds))
+                * len(self.aggregation) * len(self.policies)
+                * len(self.seeds))
 
     def cells(self) -> list[SweepCell]:
-        """Expand the grid: dataset > (N, K) > scenario > policy > seed.
+        """Expand the grid: dataset > (N, K) > scenario > aggregation >
+        policy > seed.
 
-        Ids are stable; the scenario segment is omitted for "static" so
-        pre-scenario sweep ids (and committed artifacts) stay unchanged.
+        Ids are stable; the scenario and aggregation segments are omitted
+        for "static" / "sync" so pre-existing sweep ids (and committed
+        artifacts) stay unchanged.
         """
         out: list[SweepCell] = []
         ov = dict(self.overrides)
@@ -165,15 +186,20 @@ class SweepSpec:
                 for k in self.n_subchannels:
                     for sc in self.scenarios:
                         sc_part = "" if sc == "static" else f"-{sc}"
-                        for pol in self.policies:
-                            for seed in self.seeds:
-                                cfg = SimConfig(
-                                    dataset=dataset, n_devices=n,
-                                    n_subchannels=k, rounds=self.rounds,
-                                    policy=pol, seed=seed, scenario=sc, **ov)
-                                cid = (f"{dataset}-N{n}-K{k}{sc_part}-"
-                                       f"{pol.ds}.{pol.ra}.{pol.sa}-s{seed}")
-                                out.append(SweepCell(cid, len(out), cfg))
+                        for agg in self.aggregation:
+                            agg_part = "" if agg == "sync" else f"-{agg}"
+                            for pol in self.policies:
+                                for seed in self.seeds:
+                                    cfg = SimConfig(
+                                        dataset=dataset, n_devices=n,
+                                        n_subchannels=k, rounds=self.rounds,
+                                        policy=pol, seed=seed, scenario=sc,
+                                        aggregation=agg, **ov)
+                                    cid = (f"{dataset}-N{n}-K{k}{sc_part}"
+                                           f"{agg_part}-"
+                                           f"{pol.ds}.{pol.ra}.{pol.sa}"
+                                           f"-s{seed}")
+                                    out.append(SweepCell(cid, len(out), cfg))
         return out
 
     def to_json(self) -> dict:

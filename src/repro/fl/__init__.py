@@ -5,20 +5,33 @@ Public surface:
   make_local_trainer   -- jitted K-slot local-step trainer (eq. 33);
   aggregate            -- selection-masked weighted FedAvg (eq. 34);
   masked_weighted_mean -- its zero-weight-safe weighted-mean primitive;
+  AsyncAggregation / get_aggregation / AGGREGATION_PRESETS /
+  staleness_weight / aggregate_buffered
+                       -- the buffered staleness-weighted server of the
+                          async engine (DESIGN.md §12);
   SimConfig / SimHistory / run_simulation / run_many
                        -- the single-cell Sec.-VI simulation harness with
-                          its two round-loop engines (host loop vs fused
-                          `lax.scan`; DESIGN.md §8, §10);
+                          its three round-loop engines (host loop, fused
+                          `lax.scan`, buffered event timeline;
+                          DESIGN.md §8, §10, §12);
   TABLE1               -- the paper's Table-I per-dataset settings;
   HierSimConfig / run_hierarchical
                        -- the multi-cell (two-tier FedAvg) extension,
-                          same engine matrix.
+                          loop/scan engine matrix.
 
 Sweeps over this surface (policy x seed grids, artifacts, figures) live
 in `repro.experiments`.
 """
 from .client import make_local_trainer
-from .server import aggregate, masked_weighted_mean
+from .server import (
+    AGGREGATION_PRESETS,
+    AsyncAggregation,
+    aggregate,
+    aggregate_buffered,
+    get_aggregation,
+    masked_weighted_mean,
+    staleness_weight,
+)
 from .sim import SimConfig, SimHistory, TABLE1, run_many, run_simulation
 from .hierarchical import HierSimConfig, run_hierarchical
 
@@ -26,6 +39,11 @@ __all__ = [
     "make_local_trainer",
     "aggregate",
     "masked_weighted_mean",
+    "AsyncAggregation",
+    "AGGREGATION_PRESETS",
+    "get_aggregation",
+    "staleness_weight",
+    "aggregate_buffered",
     "SimConfig",
     "SimHistory",
     "TABLE1",

@@ -1,0 +1,216 @@
+"""engine="async": the buffered, staleness-weighted event-timeline loop.
+
+The synchronous engines close every round with the eq.-9 barrier — the
+round is as slow as its slowest transmitter.  This module replaces the
+barrier with a buffered server (DESIGN.md §12): the leader still runs the
+Stackelberg step each *event* (AoU selection re-prioritizes on the event
+stream, busy devices drop out of the Prop-1 mask), dispatched devices
+train immediately from the current global model, and their uploads fly
+for their OWN Γ-trace duration.  The server commits an event once the
+`AsyncAggregation.buffer` earliest uploads have landed, weighting each
+committed update by beta_n * f(staleness) (`server.staleness_weight`) and
+stepping by the spec's server_lr (`server.aggregate_buffered`).
+
+Everything is one fixed-shape `lax.scan` over `rounds` server events, so
+the async engine inherits the scan engine's whole toolchain: `jit`,
+`vmap` across sweep cells, `lax.switch` policy batching, `shard_map`
+sharding, and the precomputed whole-horizon Γ/scenario traces
+(`fl.sim` builds the inputs and owns dispatch; this module only builds
+the traced event body).
+
+Carry layout (DESIGN.md §12) — the sync carry (params, key, age) plus the
+event buffer:
+
+  buf     pytree, leaves (N+1, ...)   in-flight client models, device-
+                                      indexed (row N is the sacrificial
+                                      scatter target for empty slots);
+  base    pytree, leaves (N+1, ...)   the global model each flight was
+                                      dispatched FROM.  A commit applies
+                                      the TRANSLATED update
+                                      w_i + (w - b_i) — the flight's local
+                                      progress grafted onto the current
+                                      model (FedBuff-style delta
+                                      application), so a stale commit can
+                                      never drag the server back toward
+                                      the old state it trained from;
+  disp_e  (N,) int32                  event index of each flight's dispatch
+                                      (staleness = current event - disp_e);
+  rem     (N,) float32                remaining upload time; RELATIVE times
+                                      keep the degenerate limit bit-exact —
+                                      an absolute-clock formulation would
+                                      round (t + T) - t through float32;
+  active  (N,) bool                   device has an uncommitted upload in
+                                      flight (at most ONE per device, so the
+                                      buffer structurally cannot overflow).
+
+Degenerate limit: with `buffer="full"` every in-flight upload commits at
+its own event, so commit == dispatch, staleness == 0 (weight multiplier
+exactly 1.0), the server_lr=1 mixing is an exact endpoint select, the
+translation vanishes identically (b_i IS the current model bitwise, so
+w_i + (w - b_i) = w_i + 0.0 = w_i), and the event latency is the max over
+dispatched rem — the scan engine's eq.-9 barrier.  Every arithmetic step
+on that path reproduces the sync ops bit-for-bit (pinned by
+tests/test_async_equivalence.py for every scenario preset).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine_common import (
+    make_eval_fn,
+    make_leader_branches,
+    make_xs,
+    run_leader,
+    train_clients,
+)
+from .server import aggregate_buffered, staleness_weight
+
+__all__ = ["commit_event", "build_async_runner"]
+
+
+def commit_event(rem: jax.Array, active: jax.Array, buffer: jax.Array,
+                 k: int) -> tuple[jax.Array, jax.Array]:
+    """The buffered server's commit decision for one event.
+
+    Args:
+      rem:    (N,) float32 remaining upload time per device.
+      active: (N,) bool in-flight mask (`rem` is meaningful where True).
+      buffer: scalar int commit batch size M (traced operand, so sweeps
+        may vary it per cell without recompiling).
+      k: static sub-channel count — the server drains at most K uploads
+        per event.
+
+    Returns (delta, commit): the event's latency (time until the M-th
+    earliest in-flight upload lands; 0 when nothing is in flight) and the
+    committed-device mask (every upload landing within `delta`, ties
+    committing together, capped at the K earliest by (rem, id) order).
+    """
+    n = rem.shape[0]
+    n_active = active.sum()
+    r_sorted = jnp.sort(jnp.where(active, rem, jnp.inf))
+    m_idx = jnp.clip(jnp.minimum(buffer, n_active) - 1, 0, n - 1)
+    delta = jnp.where(n_active > 0, r_sorted[m_idx], jnp.float32(0.0))
+    arrived = active & (rem <= delta)
+    # Serve at most K uploads per event: rank arrivals by (rem, id) —
+    # argsort is stable, so ties break by device id like the host leader.
+    order = jnp.argsort(jnp.where(arrived, rem, jnp.inf))
+    rank = jnp.zeros(n, jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    return delta, arrived & (rank < k)
+
+
+def build_async_runner(model, trainer, policies: Sequence[tuple[str, str]],
+                       *, k: int, n: int, rounds: int,
+                       eval_mask: np.ndarray, track_gradnorm: bool = False,
+                       max_rounds: int = 200):
+    """One fused `lax.scan` over server events: leader + training + commits.
+
+    Mirrors `fl.sim._build_scan_runner` (same `data` dict contract plus
+    the async operands `buffer` and `stale_exp`), returning the raw
+    traceable fn(data) -> ys for the caller to `jit` / `jit(vmap(...))`.
+    """
+    n_clusters = int(math.ceil(n / k))
+    ndev = jnp.arange(n)
+    kslot = jnp.arange(k)
+    f0 = jnp.float32(0.0)
+
+    def run(data):
+        branches = make_leader_branches(policies, data, k=k, n=n,
+                                        n_clusters=n_clusters,
+                                        max_rounds=max_rounds)
+        ev = make_eval_fn(model, data, track_gradnorm)
+
+        def body(carry, x):
+            params, key, age, buf, base, disp_e, rem, active = carry
+
+            # ---- leader plane: busy devices lose Prop-1 feasibility, so
+            # AoU selection re-prioritizes over the FREE population --------
+            feas_free = x["feas"] & ~active[None, :]
+            lead = run_leader(branches, data["policy_idx"], age,
+                              feas_free, x)
+            tx = lead["transmitted"]
+            ch_g = jnp.where(tx, lead["channel_of"], 0)
+            t_dev = x["gamma"][ch_g, ndev]
+            energy = jnp.sum(jnp.where(tx, x["energy"][ch_g, ndev], f0))
+            overflow = (tx & active).any()      # must be structurally False
+
+            # ---- learning plane: dispatched devices train from the
+            # CURRENT global model (same PRNG discipline as sync) ----------
+            tx_ids = jnp.nonzero(tx, size=k, fill_value=0)[0]
+            cnt = tx.sum()
+
+            def do_train(ops):
+                p, kk = ops
+                return train_clients(trainer, data, k, p, kk, tx_ids)
+
+            def no_train(ops):
+                p, kk = ops
+                cp = jax.tree_util.tree_map(
+                    lambda l: jnp.zeros((k,) + l.shape, l.dtype), p)
+                return cp, kk
+
+            cp, key = jax.lax.cond(cnt > 0, do_train, no_train, (params, key))
+
+            # ---- buffer the flights: device-indexed scatter (empty slots
+            # land on the sacrificial row n) -------------------------------
+            ids_s = jnp.where(kslot < cnt, tx_ids, n)
+            buf = jax.tree_util.tree_map(
+                lambda b, c: b.at[ids_s].set(c), buf, cp)
+            base = jax.tree_util.tree_map(
+                lambda b, g: b.at[ids_s].set(
+                    jnp.broadcast_to(g, (k,) + g.shape)), base, params)
+            active = active | tx
+            rem = jnp.where(tx, t_dev, rem)
+            disp_e = jnp.where(tx, x["t"], disp_e)
+
+            # ---- commit: wait for the buffer-many earliest arrivals ------
+            delta, commit = commit_event(rem, active, data["buffer"], k)
+            stale = x["t"] - disp_e
+            w_st = staleness_weight(stale, data["stale_exp"])
+            cids = jnp.nonzero(commit, size=k, fill_value=0)[0]
+            commit_cnt = commit.sum()
+            cw = jnp.where(kslot < commit_cnt,
+                           data["beta"][cids] * w_st[cids], f0)
+            # Graft each committed flight's local progress onto the CURRENT
+            # model: w_i + (w - b_i).  Fresh commits have b_i == w bitwise,
+            # so the translation is an exact no-op in the sync limit.
+            translated = jax.tree_util.tree_map(
+                lambda c, bb, g: c + (g - bb),
+                jax.tree_util.tree_map(lambda b: b[cids], buf),
+                jax.tree_util.tree_map(lambda b: b[cids], base),
+                params)
+            params = aggregate_buffered(params, translated, cw,
+                                        data["server_lr"])
+
+            # ---- post-commit state: AoU resets when the SERVER ingests the
+            # update; surviving flights advance by the event's duration ----
+            active = active & ~commit
+            rem = jnp.where(active, rem - delta, f0)
+            age_next = jnp.where(commit, 1, age + 1).astype(age.dtype)
+
+            loss, acc, gnorm = jax.lax.cond(
+                x["eval_mask"], ev, lambda p: (f0, f0, f0), params)
+
+            ys = dict(loss=loss, acc=acc, gnorm=gnorm, latency=delta,
+                      energy=energy, selected=lead["selected"],
+                      transmitted=tx, age=age_next, committed=commit,
+                      n_pending=active.sum(dtype=jnp.int32),
+                      overflow=overflow,
+                      rem_dispatch=jnp.where(tx, t_dev, f0))
+            return (params, key, age_next, buf, base, disp_e, rem,
+                    active), ys
+
+        buf0 = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((n + 1,) + l.shape, l.dtype), data["params0"])
+        carry0 = (data["params0"], data["key0"], jnp.ones(n, jnp.int32),
+                  buf0, buf0, jnp.zeros(n, jnp.int32),
+                  jnp.zeros(n, jnp.float32), jnp.zeros(n, bool))
+        _, ys = jax.lax.scan(body, carry0, make_xs(data, rounds, eval_mask))
+        return ys
+
+    return run

@@ -1,8 +1,9 @@
-"""Server-side aggregation: the selection-masked weighted FedAvg of eq. (34).
+"""Server-side aggregation: the selection-masked weighted FedAvg of eq. (34),
+plus the staleness-weighted buffered commit of the async engine.
 
     w^{t+1} = sum_n S_n (sum_k psi_kn) beta_n w_n / sum_n S_n (sum_k psi_kn) beta_n
 
-Two implementations:
+Synchronous implementations:
   * `aggregate`       -- stacked-leaf weighted mean (single-host simulation);
   * `masked_psum_agg` -- the distributed form used inside the big-model
     train_step: each data shard contributes grad * weight, followed by ONE
@@ -12,15 +13,43 @@ Two implementations:
 
 If no device transmits in a round (all-infeasible corner of Prop. 1), the
 global model is unchanged (weights sum to 0 -> guarded).
+
+Asynchronous surface (`engine="async"`, DESIGN.md §12): an
+`AsyncAggregation` spec names the buffered server's commit policy —
+how many in-flight uploads the server waits for per event (`buffer`),
+the staleness decay `f(age)` applied to each committed update's weight
+(`staleness_weight`: polynomial and constant presets), and the server
+step size.  `aggregate_buffered` performs one commit:
+
+    w <- (1-m) w + m * WeightedMean(committed; beta_n * f(s_n)),
+    m = server_lr (1.0 by default; 0 when nothing committed).
+
+The engine feeds it TRANSLATED updates w_n + (w - b_n) — each flight's
+local progress grafted onto the current model (see fl.async_loop) — so
+at m = 1 the commit is a full FedBuff-style step on the staleness-
+weighted mean of the committed deltas.  When every upload is fresh
+(f(0) = 1 exactly, translation an exact no-op) the commit IS eq. (34)
+bit-for-bit — the degenerate limit the differential harness
+(tests/test_async_equivalence.py) pins against the synchronous scan
+engine.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["aggregate", "masked_weighted_mean"]
+__all__ = [
+    "aggregate",
+    "masked_weighted_mean",
+    "AsyncAggregation",
+    "AGGREGATION_PRESETS",
+    "get_aggregation",
+    "staleness_weight",
+    "aggregate_buffered",
+]
 
 
 def masked_weighted_mean(stacked: jax.Array, weights: jax.Array) -> jax.Array:
@@ -45,3 +74,134 @@ def aggregate(global_params: Any, client_params: Any, weights: jax.Array) -> Any
         return jnp.where(wsum > 0, agg, g).astype(g.dtype)
 
     return jax.tree_util.tree_map(leaf, global_params, client_params)
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous (buffered, staleness-weighted) aggregation — DESIGN.md §12
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AsyncAggregation:
+    """Commit policy of the buffered async server (`engine="async"`).
+
+    Attributes:
+      buffer: how many in-flight uploads the server waits for before
+        committing an event — the FedBuff-style aggregation goal.
+        An int M >= 1 waits for the M earliest arrivals (ties commit
+        together); "full" waits for EVERY in-flight upload, which is the
+        synchronous barrier — the degenerate limit that reproduces the
+        scan engine bit-exactly; None (default) resolves to
+        max(1, K // 2): wait for half the sub-channels.
+      staleness: weight-decay preset applied per committed update,
+        "poly" -> f(s) = (1 + s)^-exponent, "const" -> f(s) = 1.
+        s counts server events since the update's dispatch; f(0) == 1.0
+        exactly on either preset, so fresh commits are never reweighted.
+      exponent: the polynomial decay rate (ignored by "const").
+      server_lr: the commit step size m — how far the model moves toward
+        the staleness-weighted mean of the committed (translated)
+        updates.  The default 1.0 is the full FedBuff-style step and the
+        bit-exact sync endpoint; smaller values damp commit variance.
+    """
+
+    buffer: int | str | None = None
+    staleness: str = "poly"
+    exponent: float = 0.5
+    server_lr: float = 1.0
+
+    def __post_init__(self):
+        if isinstance(self.buffer, str) and self.buffer != "full":
+            raise ValueError(f"buffer must be an int, None, or 'full': "
+                             f"{self.buffer!r}")
+        if isinstance(self.buffer, int) and self.buffer < 1:
+            raise ValueError(f"buffer must be >= 1: {self.buffer}")
+        if self.staleness not in ("poly", "const"):
+            raise ValueError(f"unknown staleness preset: {self.staleness!r}")
+        if self.exponent < 0:
+            raise ValueError(f"exponent must be >= 0: {self.exponent}")
+        if not 0.0 < self.server_lr <= 1.0:
+            raise ValueError(f"server_lr must be in (0, 1]: {self.server_lr}")
+
+    def resolve_buffer(self, n: int, k: int) -> int:
+        """The concrete commit batch size M for an (N, K) network.
+
+        An int buffer must be strictly below the K sub-channels: with at
+        most K dispatches per event, any M >= K already drains every
+        flight each event — i.e. silently degenerates to the synchronous
+        barrier — so those values are rejected rather than letting a
+        buffer sweep report identical "async" rows without warning.
+        (K = 1 is exempt: buffer=1 is the only value and the engines
+        coincide there by construction.)
+        """
+        if self.buffer == "full":
+            return n
+        if self.buffer is None:
+            return max(1, k // 2)
+        if self.buffer >= k and k > 1:
+            raise ValueError(
+                f"buffer={self.buffer} >= K={k} waits for every in-flight "
+                f"upload each event — that IS the synchronous barrier; say "
+                f"buffer='full' if that is intended")
+        return int(self.buffer)
+
+    def stale_exponent(self) -> float:
+        """The decay fed to `staleness_weight` (0.0 encodes "const")."""
+        return 0.0 if self.staleness == "const" else float(self.exponent)
+
+
+# Named presets usable as `SimConfig.aggregation` / the SweepSpec
+# `aggregation` axis ("sync" is the absence of an AsyncAggregation).
+AGGREGATION_PRESETS: dict[str, AsyncAggregation] = {
+    "async": AsyncAggregation(),
+    "async_const": AsyncAggregation(staleness="const"),
+    "async_full": AsyncAggregation(buffer="full"),
+}
+
+
+def get_aggregation(agg: "str | AsyncAggregation") -> AsyncAggregation | None:
+    """Resolve an aggregation spec; None means synchronous eq.-34."""
+    if isinstance(agg, AsyncAggregation):
+        return agg
+    if agg == "sync":
+        return None
+    try:
+        return AGGREGATION_PRESETS[agg]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregation: {agg!r} "
+            f"(known: ['sync'] + {sorted(AGGREGATION_PRESETS)})") from None
+
+
+def staleness_weight(staleness: jax.Array, exponent: jax.Array) -> jax.Array:
+    """f(s) = (1 + s)^-exponent, EXACTLY 1.0 at s = 0 (and everywhere when
+    exponent = 0, the "const" preset) — the bit-exact sync anchor relies on
+    fresh commits carrying weight multiplier 1.0, not a float power
+    round-trip."""
+    s = staleness.astype(jnp.float32)
+    return jnp.where(s <= 0, jnp.float32(1.0),
+                     jnp.power(1.0 + s, -exponent).astype(jnp.float32))
+
+
+def aggregate_buffered(global_params: Any, committed_params: Any,
+                       weights: jax.Array, server_lr: jax.Array) -> Any:
+    """One buffered commit (async engine, DESIGN.md §12).
+
+    committed_params leaves have a leading commit-slot axis (K, ...) and
+    hold the TRANSLATED updates w_n + (w - b_n) (fl.async_loop);
+    weights (K,) = beta_n * f(staleness_n) per slot (0 for empty slots).
+
+    The committed updates' weighted mean is mixed into the global model
+    with m = server_lr (0 when nothing committed, so an empty event
+    leaves the model untouched).  Both endpoints are exact selects:
+    m == 1 on fresh full commits is bitwise `aggregate` (eq. 34) — the
+    degenerate sync limit — and m == 0 is bitwise identity.
+    """
+    wsum = weights.sum()
+    m = jnp.where(wsum > 0, jnp.float32(server_lr), jnp.float32(0.0))
+
+    def leaf(g, c):
+        agg = masked_weighted_mean(c, weights)
+        agg = jnp.where(wsum > 0, agg, g).astype(g.dtype)
+        mixed = ((1.0 - m) * g + m * agg).astype(g.dtype)
+        return jnp.where(m >= 1.0, agg, jnp.where(m <= 0.0, g, mixed))
+
+    return jax.tree_util.tree_map(leaf, global_params, committed_params)

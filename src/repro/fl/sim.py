@@ -15,7 +15,7 @@ solver batch, so planning cost is amortized over seeds/sweeps (Figs. 5-9
 sweep many configs) and the learning plane never waits on the host solver
 mid-run.  DESIGN.md §6.
 
-Two round-loop engines (DESIGN.md §8):
+Three round-loop engines (DESIGN.md §8, §12):
 
   engine="loop"  -- the host loop: per-round `plan_round` (NumPy leader)
                     interleaved with jitted training calls;
@@ -23,12 +23,22 @@ Two round-loop engines (DESIGN.md §8):
                     (`core.leader_jax`) fused with training inside ONE
                     `lax.scan` over rounds, and — in `run_many` — `vmap`ped
                     across the seeds of a sweep so a Fig. 5-9 curve family
-                    is a single compiled program.
+                    is a single compiled program;
+  engine="async" -- the buffered event-timeline loop (`fl.async_loop`):
+                    the eq.-9 round barrier is replaced by per-device
+                    virtual clocks driven by the same precomputed Γ +
+                    scenario traces, with the server committing
+                    staleness-weighted updates as they land
+                    (`SimConfig.aggregation` names the commit policy;
+                    cells with an async aggregation route here
+                    automatically from the other engines).
 
-Both engines consume identical pre-sampled randomness (`RoundRandomness`
+All engines consume identical pre-sampled randomness (`RoundRandomness`
 permutations drawn in `_prepare`), so their transmitted sets, AoU
 trajectories, and latencies coincide exactly; the differential harness
-tests/test_scan_equivalence.py pins this for every RoundPolicy.
+tests/test_scan_equivalence.py pins this for every RoundPolicy, and
+tests/test_async_equivalence.py pins the async engine's degenerate
+(full-buffer) limit bit-exactly against the scan engine.
 
 Scenario layer (DESIGN.md §11): the wireless environment of a simulation
 is a named `repro.scenarios.Scenario` — temporally correlated fading,
@@ -69,7 +79,6 @@ from ..core import (
     RoundRandomness,
     WirelessConfig,
     init_aou,
-    leader_round,
     make_clusters,
     participation_deficit,
     plan_round,
@@ -95,8 +104,16 @@ from ..data.fl_datasets import (
 )
 from ..models.small import SmallModel, get_small_model
 from ..train.optimizer import make_optimizer
+from .async_loop import build_async_runner
 from .client import make_local_trainer
-from .server import aggregate
+from .engine_common import (
+    make_eval_fn,
+    make_leader_branches,
+    make_xs,
+    run_leader,
+    train_clients,
+)
+from .server import AsyncAggregation, aggregate, get_aggregation
 
 __all__ = ["SimConfig", "SimHistory", "run_simulation", "run_many", "TABLE1"]
 
@@ -133,6 +150,10 @@ class SimConfig:
     partition: str = "iid"             # "iid" (paper) | "dirichlet" (non-IID ext.)
     dirichlet_alpha: float = 0.5
     scenario: str | Scenario = "static"  # environment preset name or Scenario
+    # Server aggregation discipline: "sync" (eq. 34, round barrier) or an
+    # async preset name / `AsyncAggregation` spec (buffered staleness-
+    # weighted commits; routes the cell through engine="async").
+    aggregation: str | AsyncAggregation = "sync"
 
     def wireless(self) -> WirelessConfig:
         t1 = TABLE1[self.dataset]
@@ -175,6 +196,12 @@ class SimHistory:
     energy_all: np.ndarray | None = None    # (rounds,)
     tx_trace: np.ndarray | None = None      # (rounds, N) bool
     age_trace: np.ndarray | None = None     # (rounds, N) post-update AoU
+    # Async-engine extras (None on sync runs).  For engine="async",
+    # `tx_trace` records DISPATCHES and `commit_trace` the server-side
+    # commits; `async_trace` holds the event-loop invariant traces
+    # (n_pending / overflow / rem_dispatch) the property tests consume.
+    commit_trace: np.ndarray | None = None  # (rounds, N) bool
+    async_trace: dict | None = None
 
 
 def _eval_rounds(rounds: int, eval_every: int) -> list[int]:
@@ -550,32 +577,16 @@ def _build_scan_runner(cfg: SimConfig, model: SmallModel, trainer,
         policies = [(cfg.policy.ds, cfg.policy.sa)]
 
     def run(data):
-        def gnorm_fn(p):
-            return sum(
-                jnp.sum(jnp.square(g))
-                for g in jax.tree_util.tree_leaves(
-                    jax.grad(model.loss)(p, data["x_full"], data["y_full"])))
-
-        def leader_branch(ds, sa):
-            def branch(ops):
-                age, x = ops
-                return leader_round(
-                    age, data["beta"], x["gamma"], x["feas"],
-                    x["sel_perm"], x["assign_perm"], x["t"],
-                    data["clusters"], data["fixed_ids"],
-                    ds=ds, sa=sa, k=k, n=n, n_clusters=n_clusters)
-            return branch
-
-        branches = [leader_branch(ds, sa) for ds, sa in policies]
+        branches = make_leader_branches(policies, data, k=k, n=n,
+                                        n_clusters=n_clusters)
+        ev = make_eval_fn(model, data, cfg.track_gradnorm)
 
         def body(carry, x):
             params, key, age = carry
 
             # ---- leader plane (Algorithms 2-3 + AoU), pure jnp ------------
-            if len(branches) == 1:
-                lead = branches[0]((age, x))
-            else:
-                lead = jax.lax.switch(data["policy_idx"], branches, (age, x))
+            lead = run_leader(branches, data["policy_idx"], age,
+                              x["feas"], x)
             tx = lead["transmitted"]
             ch_g = jnp.where(tx, lead["channel_of"], 0)
             t_dev = x["gamma"][ch_g, ndev]
@@ -590,26 +601,15 @@ def _build_scan_runner(cfg: SimConfig, model: SmallModel, trainer,
 
             def do_train(ops):
                 p, kk = ops
-                kk, k_round = jax.random.split(kk)
-                keys = jax.random.split(k_round, k)
-                cp = trainer(p, data["x_all"][tx_ids], data["y_all"][tx_ids],
-                             data["m_all"][tx_ids], keys)
+                cp, kk = train_clients(trainer, data, k, p, kk, tx_ids)
                 return aggregate(p, cp, slot_w), kk
 
             params, key = jax.lax.cond(
                 cnt > 0, do_train, lambda ops: ops, (params, key))
 
             # ---- bookkeeping: evaluate only at eval rounds ----------------
-            is_eval = x["eval_mask"]
-
-            def ev(p):
-                gn = gnorm_fn(p) if cfg.track_gradnorm else f0
-                return (model.loss(p, data["x_full"], data["y_full"]),
-                        model.accuracy(p, data["x_full"], data["y_full"]),
-                        jnp.float32(gn))
-
             loss, acc, gnorm = jax.lax.cond(
-                is_eval, ev, lambda p: (f0, f0, f0), params)
+                x["eval_mask"], ev, lambda p: (f0, f0, f0), params)
 
             ys = dict(loss=loss, acc=acc, gnorm=gnorm, latency=latency,
                       energy=energy, selected=lead["selected"],
@@ -621,13 +621,8 @@ def _build_scan_runner(cfg: SimConfig, model: SmallModel, trainer,
         # a real branch under vmap).
         eval_mask = np.zeros(rounds, bool)
         eval_mask[_eval_rounds(rounds, eval_every)] = True
-        xs = dict(gamma=data["gamma"], feas=data["feas"],
-                  energy=data["energy"], sel_perm=data["sel_perms"],
-                  assign_perm=data["assign_perms"],
-                  eval_mask=jnp.asarray(eval_mask),
-                  t=jnp.arange(rounds, dtype=jnp.int32))
         carry0 = (data["params0"], data["key0"], jnp.ones(n, jnp.int32))
-        _, ys = jax.lax.scan(body, carry0, xs)
+        _, ys = jax.lax.scan(body, carry0, make_xs(data, rounds, eval_mask))
         return ys
 
     return run
@@ -670,10 +665,14 @@ def _scan_group_key(cfg: SimConfig) -> SimConfig:
     branch inside the shared program (DESIGN.md §10), and a scenario only
     changes the DATA flowing through the fixed-shape traces (channel
     horizon, Prop-1 mask, budgets), never the program — so a policy x
-    scenario x seed grid is ONE compiled dispatch (DESIGN.md §11)."""
+    scenario x seed grid is ONE compiled dispatch (DESIGN.md §11).  The
+    aggregation spec normalizes away too: the async engine's buffer size
+    and staleness exponent are traced operands (DESIGN.md §12), so an
+    aggregation axis varies data, not programs — run_many partitions
+    sync-mode from async-mode cells BEFORE grouping (different carries)."""
     return dataclasses.replace(
         cfg, seed=0, radius_m=0.0, pt_dbm=0.0, e_max_j=None,
-        policy=RoundPolicy(), scenario="static")
+        policy=RoundPolicy(), scenario="static", aggregation="sync")
 
 
 def _prep_key(cfg: SimConfig) -> SimConfig:
@@ -681,24 +680,16 @@ def _prep_key(cfg: SimConfig) -> SimConfig:
     dataset, partition, scenario traces (topology, channel horizon, churn,
     budgets), and injected permutations are all drawn from `seed` before
     the policy is ever consulted.  The scenario stays in the key — it IS
-    part of the world."""
-    return dataclasses.replace(cfg, policy=RoundPolicy())
+    part of the world.  The aggregation discipline does not: sync and
+    async variants of one world share its samples and its Γ solve, which
+    is exactly what makes the sync-vs-async comparison differential."""
+    return dataclasses.replace(cfg, policy=RoundPolicy(), aggregation="sync")
 
 
-def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
-                    ras: Sequence[RAResult], plan_walls: Sequence[float],
-                    shard: bool = False) -> list[SimHistory]:
-    """Run one static-shape group of simulations through the scan engine.
-
-    Members differing in seed/wireless data/policy stack into one batch:
-    a single `jit(vmap(run))` program (distinct ds/sa pairs become
-    `lax.switch` branches selected per batch element).  With `shard=True`
-    and more than one visible local device, the batch axis is additionally
-    sharded across devices via `shard_map` — the batch is padded to a
-    device-count multiple by repeating cell 0 and the pad rows are dropped
-    from the histories (per-cell programs are independent, so padding
-    cannot perturb real cells).
-    """
+def _group_trainer_and_policies(cfgs: Sequence[SimConfig]):
+    """Shared scan/async group setup: model, un-jitted trainer (the group
+    program jits around it), and the group's distinct (ds, sa) leader
+    variants in first-appearance order with each cell's branch index."""
     cfg = cfgs[0]
     t1 = TABLE1[cfg.dataset]
     model = get_small_model(cfg.dataset)
@@ -708,7 +699,6 @@ def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
         local_steps=cfg.local_steps, loss_per_example=model.loss_per_example,
         jit=False,
     )
-    # Distinct leader variants of the group, in first-appearance order.
     policies: list[tuple[str, str]] = []
     pol_idx = []
     for c in cfgs:
@@ -716,12 +706,14 @@ def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
         if key not in policies:
             policies.append(key)
         pol_idx.append(policies.index(key))
-    run = _build_scan_runner(cfg, model, trainer, policies)
+    return model, trainer, policies, pol_idx
 
-    # The scan leader ranks float32 age*beta products (core.leader_jax
-    # .priority_order); they are integer-exact — and hence tie/order
-    # identical to the host's f64 ranking — only below 2^24.  Ages are
-    # bounded by rounds + 1.
+
+def _check_f32_priorities(preps: Sequence[_Prepared]) -> None:
+    # The device-resident leaders rank float32 age*beta products
+    # (core.leader_jax.priority_order); they are integer-exact — and hence
+    # tie/order identical to the host's f64 ranking — only below 2^24.
+    # Ages are bounded by rounds + 1.
     for p in preps:
         worst = (p.cfg.rounds + 1) * float(p.beta.max())
         if worst >= 2 ** 24:
@@ -730,10 +722,12 @@ def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
                 f"2^24, where float32 priorities lose host equivalence — "
                 f"use engine='loop' or shrink rounds/data sizes")
 
-    t_start = time.time()
-    bmax = max(int(p.part.beta.max()) for p in preps)
-    datas = [_scan_inputs(p, ra, bmax, i)
-             for p, ra, i in zip(preps, ras, pol_idx)]
+
+def _dispatch_group(run, datas: list[dict], shard: bool):
+    """Dispatch one static-shape group: solo jit, jit(vmap), or — with
+    more than one visible local device — `shard_map` over a 1-D batch
+    mesh (padded to a device-count multiple by repeating cell 0; pad rows
+    are dropped by the caller).  Returns the blocked-on ys."""
     n_dev = jax.local_device_count()
     if len(datas) == 1:
         ys = jax.jit(run)(datas[0])
@@ -756,6 +750,33 @@ def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
             lambda *leaves: jnp.stack(leaves), *datas)
         ys = jax.jit(jax.vmap(run))(stacked)
     jax.block_until_ready(ys)
+    return ys
+
+
+def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
+                    ras: Sequence[RAResult], plan_walls: Sequence[float],
+                    shard: bool = False) -> list[SimHistory]:
+    """Run one static-shape group of simulations through the scan engine.
+
+    Members differing in seed/wireless data/policy stack into one batch:
+    a single `jit(vmap(run))` program (distinct ds/sa pairs become
+    `lax.switch` branches selected per batch element).  With `shard=True`
+    and more than one visible local device, the batch axis is additionally
+    sharded across devices via `shard_map` — the batch is padded to a
+    device-count multiple by repeating cell 0 and the pad rows are dropped
+    from the histories (per-cell programs are independent, so padding
+    cannot perturb real cells).
+    """
+    cfg = cfgs[0]
+    model, trainer, policies, pol_idx = _group_trainer_and_policies(cfgs)
+    run = _build_scan_runner(cfg, model, trainer, policies)
+    _check_f32_priorities(preps)
+
+    t_start = time.time()
+    bmax = max(int(p.part.beta.max()) for p in preps)
+    datas = [_scan_inputs(p, ra, bmax, i)
+             for p, ra, i in zip(preps, ras, pol_idx)]
+    ys = _dispatch_group(run, datas, shard)
     wall_each = (time.time() - t_start) / len(datas)
 
     out = []
@@ -763,6 +784,73 @@ def _run_group_scan(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
         ys_i = ys if len(datas) == 1 else jax.tree_util.tree_map(
             lambda leaf: leaf[i], ys)
         out.append(_history_from_scan(c, p.beta, ys_i, wall_each + w, w))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# engine="async": the buffered event-timeline loop (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _async_spec(cfg: SimConfig) -> AsyncAggregation:
+    """The cell's commit policy.  A "sync" cell forced through the event
+    engine runs the degenerate full-buffer barrier, which reproduces the
+    scan engine bit-exactly — the differential anchor."""
+    spec = get_aggregation(cfg.aggregation)
+    if spec is None:
+        spec = AsyncAggregation(buffer="full", staleness="const")
+    return spec
+
+
+def _history_from_async(cfg: SimConfig, beta: np.ndarray, ys: dict,
+                        wall_s: float, plan_wall_s: float) -> SimHistory:
+    hist = _history_from_scan(cfg, beta, ys, wall_s, plan_wall_s)
+    hist.commit_trace = np.asarray(ys["committed"])
+    hist.async_trace = dict(
+        n_pending=np.asarray(ys["n_pending"], np.int64),
+        overflow=np.asarray(ys["overflow"]),
+        rem_dispatch=np.asarray(ys["rem_dispatch"], np.float64),
+    )
+    return hist
+
+
+def _run_group_async(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
+                     ras: Sequence[RAResult], plan_walls: Sequence[float],
+                     shard: bool = False) -> list[SimHistory]:
+    """Run one static-shape group through the buffered event-timeline
+    engine (`fl.async_loop`).  Grouping/batching/sharding mirror the scan
+    engine exactly; each cell's commit batch size and staleness exponent
+    enter as traced operands, so a whole aggregation axis shares one
+    compiled event program per shape.
+    """
+    cfg = cfgs[0]
+    model, trainer, policies, pol_idx = _group_trainer_and_policies(cfgs)
+    eval_mask = np.zeros(cfg.rounds, bool)
+    eval_mask[_eval_rounds(cfg.rounds, cfg.eval_every)] = True
+    run = build_async_runner(
+        model, trainer, policies, k=cfg.n_subchannels, n=cfg.n_devices,
+        rounds=cfg.rounds, eval_mask=eval_mask,
+        track_gradnorm=cfg.track_gradnorm)
+    _check_f32_priorities(preps)
+
+    t_start = time.time()
+    bmax = max(int(p.part.beta.max()) for p in preps)
+    datas = []
+    for c, p, ra, i in zip(cfgs, preps, ras, pol_idx):
+        d = _scan_inputs(p, ra, bmax, i)
+        spec = _async_spec(c)
+        d["buffer"] = jnp.int32(
+            spec.resolve_buffer(cfg.n_devices, cfg.n_subchannels))
+        d["stale_exp"] = jnp.float32(spec.stale_exponent())
+        d["server_lr"] = jnp.float32(spec.server_lr)
+        datas.append(d)
+    ys = _dispatch_group(run, datas, shard)
+    wall_each = (time.time() - t_start) / len(datas)
+
+    out = []
+    for i, (c, p, w) in enumerate(zip(cfgs, preps, plan_walls)):
+        ys_i = ys if len(datas) == 1 else jax.tree_util.tree_map(
+            lambda leaf: leaf[i], ys)
+        out.append(_history_from_async(c, p.beta, ys_i, wall_each + w, w))
     return out
 
 
@@ -793,17 +881,28 @@ def run_many(cfgs: Sequence[SimConfig], *,
       cfgs: the simulations to run; results are returned in the same order.
       ra_backend: projection backend for the Γ solver (None = default;
         see `kernels.polyblock_project.ops`).
-      engine: "loop" (host round loop) or "scan" (device-resident).
-      shard: shard the scan engine's batch axis across local devices via
-        `shard_map`.  None (default) auto-enables sharding when more than
-        one local device is visible; False forces single-device `vmap`;
-        True asks for sharding (a no-op on one device).  Ignored by
-        engine="loop".
+      engine: "loop" (host round loop), "scan" (device-resident), or
+        "async" (buffered event-timeline loop, DESIGN.md §12).  Cells
+        whose `SimConfig.aggregation` names an async commit policy route
+        through the async engine REGARDLESS of this argument (the sync
+        engines cannot express buffered commits); engine="async" forces
+        every cell through the event engine, where "sync"-aggregation
+        cells run the degenerate full-buffer barrier and reproduce the
+        scan engine bit-exactly.
+      shard: shard the scan/async engines' batch axis across local
+        devices via `shard_map`.  None (default) auto-enables sharding
+        when more than one local device is visible; False forces
+        single-device `vmap`; True asks for sharding (a no-op on one
+        device).  Ignored by engine="loop".
     """
-    if engine not in ("loop", "scan"):
+    if engine not in ("loop", "scan", "async"):
         raise ValueError(f"unknown engine: {engine}")
     if shard is None:
         shard = jax.local_device_count() > 1
+    # Per-cell execution mode: an async aggregation spec overrides the
+    # requested sync engine (and validates eagerly, before any sampling).
+    modes = ["async" if engine == "async" or get_aggregation(c.aggregation)
+             is not None else engine for c in cfgs]
 
     # One _Prepared world per policy-free config: policy-only variants
     # share data/topology/channels by construction (and hence Γ, below).
@@ -834,19 +933,25 @@ def run_many(cfgs: Sequence[SimConfig], *,
             transformed[id(ra)] = apply_dynamics(
                 ra, p.avail, p.slowdown, p.beta, p.wcfg)
         ras[i] = transformed[id(ra)]
-    if engine == "loop":
-        return [_run_prepared(p, ra, s) for p, ra, s in zip(preps, ras, plan_walls)]
-
-    groups: dict[SimConfig, list[int]] = {}
-    for i, c in enumerate(cfgs):
-        groups.setdefault(_scan_group_key(c), []).append(i)
     out: list[SimHistory | None] = [None] * len(cfgs)
-    for idx in groups.values():
-        hists = _run_group_scan([cfgs[i] for i in idx],
-                                [preps[i] for i in idx],
-                                [ras[i] for i in idx],
-                                [plan_walls[i] for i in idx],
-                                shard=shard)
+    for i, mode in enumerate(modes):
+        if mode == "loop":
+            out[i] = _run_prepared(preps[i], ras[i], plan_walls[i])
+
+    # Sync-mode and async-mode cells never share a program (different scan
+    # carries), so group within each mode; inside a mode the aggregation
+    # spec is data (buffer / exponent operands), not program shape.
+    groups: dict[tuple[str, SimConfig], list[int]] = {}
+    for i, (c, mode) in enumerate(zip(cfgs, modes)):
+        if mode != "loop":
+            groups.setdefault((mode, _scan_group_key(c)), []).append(i)
+    for (mode, _), idx in groups.items():
+        run_group = _run_group_scan if mode == "scan" else _run_group_async
+        hists = run_group([cfgs[i] for i in idx],
+                          [preps[i] for i in idx],
+                          [ras[i] for i in idx],
+                          [plan_walls[i] for i in idx],
+                          shard=shard)
         for i, h in zip(idx, hists):
             out[i] = h
     return out
@@ -859,7 +964,8 @@ def run_simulation(cfg: SimConfig, *, ra_backend: str | None = None,
     Equivalent to ``run_many([cfg])[0]``: the whole channel horizon is
     pre-sampled and Γ solved in one batched Algorithm-1 call, then the
     round loop runs on the chosen engine ("loop" = host, "scan" =
-    device-resident `lax.scan`; both consume identical randomness and
-    produce identical transmitted sets — DESIGN.md §8).
+    device-resident `lax.scan`, "async" = buffered event timeline; all
+    consume identical randomness and pre-solved traces — DESIGN.md §8,
+    §12).
     """
     return run_many([cfg], ra_backend=ra_backend, engine=engine)[0]

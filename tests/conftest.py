@@ -2,8 +2,35 @@
 host's real (single) device; only the dry-run forces 512 placeholder
 devices, in its own process.
 
-hypothesis is optional: without it the property-based test modules skip
-themselves via pytest.importorskip and the rest of the suite still runs."""
+Skip inventory (the ISSUE-5 triage; keep this registry current)
+---------------------------------------------------------------
+The suite is expected to skip tests ONLY for the reasons below.  Anything
+else skipping is debt — either un-skip it with a proper per-test guard or
+add it here with its reason.
+
+* ``@given`` property tests (test_wireless, test_matching,
+  test_stackelberg, test_monotonic, test_aou_selection, test_fl_substrate,
+  test_property_invariants, test_scenario_properties,
+  test_async_properties): skip PER TEST when `hypothesis` is not
+  installed, via the ``tests/_hyp.py`` shim.  These modules previously
+  skipped WHOLESALE through a module-level ``pytest.importorskip``,
+  which also silently dropped ~30 deterministic tests sharing the files;
+  the shim keeps those running everywhere.  `hypothesis` is an optional
+  dev dependency (requirements-dev.txt) — CI installs it, minimal
+  containers may not.
+* test_monotonic.py::test_solution_on_boundary_when_constrained guards
+  itself with a RUNTIME ``pytest.skip("budget not active at this
+  point")``: the test is only meaningful when its pinned (h2, beta)
+  point makes the energy budget bind under the current WirelessConfig
+  defaults — if a config change relaxes the budget there, the test is
+  vacuous, not broken.
+* test_sweep.py's 2-device shard check and the launch dry-runs spawn
+  subprocesses with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+  and skip only if the subprocess environment cannot host them.
+
+hypothesis settings: the "ci" profile (max_examples=25, no deadline)
+keeps property runtime bounded on 2-core CI runners.
+"""
 import importlib.util
 
 import numpy as np

@@ -1,8 +1,7 @@
 """AoU state machine (eq. 6-7) + Algorithm 3 device selection."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # per-test skip without hypothesis
 
 from repro.core import (
     init_aou,

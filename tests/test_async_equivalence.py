@@ -1,0 +1,243 @@
+"""Differential harness: the buffered async engine vs the sync engines.
+
+The async engine's anchor (DESIGN.md §12) is its degenerate limit: with a
+full buffer the server's commit barrier waits for EVERY in-flight upload,
+so dispatch == commit, staleness == 0, and the event loop must reproduce
+the synchronous scan engine BIT-EXACTLY — transmitted sets, AoU
+trajectories, latencies, energies, and losses — for every RoundPolicy and
+scenario preset.  Away from the limit, the event traces must satisfy the
+buffered-server protocol exactly (replayed here through the engine's own
+`commit_event` rule) and beat the synchronous barrier on simulated time
+under straggler-heavy scenarios.
+
+Set REPRO_DIFF_BACKEND=pallas to run with Γ solved by the interpret-mode
+Pallas projection backend (CI's async-differential job runs the default).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import RoundPolicy
+from repro.fl import AsyncAggregation, SimConfig, run_many, run_simulation
+from repro.fl.async_loop import commit_event
+
+RA_BACKEND = os.environ.get("REPRO_DIFF_BACKEND") or None
+
+_SMALL = dict(rounds=6, n_devices=8, n_subchannels=3, n_samples=96,
+              batch=16, local_steps=2, eval_every=2)
+
+# The pinned RoundPolicy x scenario matrix (>= 10 combos): the proposed
+# policy across every scenario preset, plus baseline policies crossed
+# with the stressful presets.
+POLICY_SCENARIOS = [
+    ("alg3", "mo", "matching", "static"),
+    ("alg3", "mo", "matching", "corr_fading"),
+    ("alg3", "mo", "matching", "mobility"),
+    ("alg3", "mo", "matching", "churn"),
+    ("alg3", "mo", "matching", "harvest"),
+    ("alg3", "mo", "matching", "urban"),
+    ("aou_topk", "mo", "matching", "churn"),
+    ("random", "fix", "random", "urban"),
+    ("cluster", "mo", "random", "churn"),
+    ("fixed", "fix", "matching", "urban"),
+    ("random", "mo", "matching", "harvest"),
+    ("cluster", "fix", "matching", "corr_fading"),
+]
+
+
+def _cfg(**kw):
+    base = dict(_SMALL, dataset="mnist")
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _assert_bit_exact(sync, asy):
+    """The degenerate-limit contract: EVERYTHING the sync engine records
+    must match bit-for-bit, and every dispatch must commit at its own
+    event."""
+    np.testing.assert_array_equal(sync.tx_trace, asy.tx_trace)
+    np.testing.assert_array_equal(sync.age_trace, asy.age_trace)
+    np.testing.assert_array_equal(sync.latency_all, asy.latency_all)
+    np.testing.assert_array_equal(sync.energy_all, asy.energy_all)
+    np.testing.assert_array_equal(sync.global_loss, asy.global_loss)
+    np.testing.assert_array_equal(sync.accuracy, asy.accuracy)
+    np.testing.assert_array_equal(sync.n_selected, asy.n_selected)
+    np.testing.assert_array_equal(sync.n_transmitted, asy.n_transmitted)
+    np.testing.assert_array_equal(asy.commit_trace, sync.tx_trace)
+    assert not asy.async_trace["overflow"].any()
+    assert asy.async_trace["n_pending"].max() == 0
+
+
+def _replay_protocol(hist, n, k, buffer):
+    """Replay the recorded event trace through the engine's own
+    `commit_event` rule and re-derive every commit decision, event
+    latency, and buffer invariant from (tx, rem_dispatch) alone.
+
+    This pins the per-device virtual clocks to the Γ latency trace: the
+    engine emits each dispatch's Γ time in `rem_dispatch`, and the replay
+    must reproduce `commit_trace` and `latency_all` exactly (identical
+    float32 ops, so equality is bitwise).
+    """
+    import jax.numpy as jnp
+
+    rem = jnp.zeros(n, jnp.float32)
+    active = np.zeros(n, bool)
+    rounds = hist.tx_trace.shape[0]
+    for e in range(rounds):
+        tx = hist.tx_trace[e]
+        # Buffer overflow is structurally impossible: a device with an
+        # uncommitted upload is busy and must never be re-dispatched.
+        assert not (tx & active).any(), f"double dispatch at event {e}"
+        active = active | tx
+        rem = jnp.where(tx, jnp.float32(hist.async_trace["rem_dispatch"][e]),
+                        rem)
+        delta, commit = commit_event(rem, jnp.asarray(active),
+                                     jnp.int32(buffer), k)
+        commit = np.asarray(commit)
+        assert float(delta) == hist.latency_all[e], f"latency at event {e}"
+        np.testing.assert_array_equal(commit, hist.commit_trace[e],
+                                      err_msg=f"commit set at event {e}")
+        assert (commit <= active).all()      # commits only in-flight devices
+        active = active & ~commit
+        rem = jnp.where(jnp.asarray(active), rem - delta, jnp.float32(0.0))
+        assert hist.async_trace["n_pending"][e] == active.sum()
+        # AoU resets exactly at server commits.
+        prev_age = hist.age_trace[e - 1] if e else np.ones(n, np.int64)
+        np.testing.assert_array_equal(
+            hist.age_trace[e], np.where(commit, 1, prev_age + 1))
+
+
+@pytest.mark.parametrize("ds,ra,sa,scenario", POLICY_SCENARIOS,
+                         ids=[f"{d}-{r}-{s}-{sc}"
+                              for d, r, s, sc in POLICY_SCENARIOS])
+def test_async_full_buffer_bit_exact_vs_scan(ds, ra, sa, scenario):
+    """engine="async" with the full-buffer barrier == engine="scan",
+    bit-for-bit, across the policy x scenario matrix."""
+    cfg = _cfg(policy=RoundPolicy(ds=ds, ra=ra, sa=sa), scenario=scenario)
+    sync = run_simulation(cfg, engine="scan", ra_backend=RA_BACKEND)
+    asy = run_simulation(cfg, engine="async", ra_backend=RA_BACKEND)
+    _assert_bit_exact(sync, asy)
+
+
+def test_async_full_buffer_any_staleness_bit_exact():
+    """With a full buffer no commit is ever stale, so the staleness
+    preset cannot perturb the degenerate limit (f(0) == 1.0 exactly)."""
+    cfg = _cfg(scenario="churn")
+    sync = run_simulation(cfg, engine="scan", ra_backend=RA_BACKEND)
+    for agg in (AsyncAggregation(buffer="full", staleness="poly"),
+                AsyncAggregation(buffer="full", staleness="const",
+                                 exponent=0.0),
+                "async_full"):
+        asy = run_simulation(
+            SimConfig(**{**_SMALL, "scenario": "churn",
+                         "aggregation": agg}),
+            ra_backend=RA_BACKEND)
+        _assert_bit_exact(sync, asy)
+
+
+def test_async_routing_engine_agnostic():
+    """An async-aggregation cell runs the event engine no matter which
+    engine the caller asked for — the sync engines cannot express
+    buffered commits, so routing must not silently change semantics."""
+    cfg = _cfg(scenario="churn", aggregation="async")
+    by_engine = [run_many([cfg], engine=e, ra_backend=RA_BACKEND)[0]
+                 for e in ("loop", "scan", "async")]
+    for other in by_engine[1:]:
+        np.testing.assert_array_equal(by_engine[0].tx_trace, other.tx_trace)
+        np.testing.assert_array_equal(by_engine[0].commit_trace,
+                                      other.commit_trace)
+        np.testing.assert_array_equal(by_engine[0].global_loss,
+                                      other.global_loss)
+
+
+@pytest.mark.slow
+def test_async_vmap_matches_solo():
+    """run_many's vmapped event engine == per-cell solo runs, bit-exact,
+    across a seed x aggregation grid (one compiled program per shape)."""
+    cfgs = [_cfg(seed=s, scenario="churn", aggregation=a)
+            for s in (0, 1, 2) for a in ("async", "async_const")]
+    vmapped = run_many(cfgs, engine="scan", ra_backend=RA_BACKEND)
+    for c, v in zip(cfgs, vmapped):
+        solo = run_simulation(c, ra_backend=RA_BACKEND)
+        np.testing.assert_array_equal(v.tx_trace, solo.tx_trace)
+        np.testing.assert_array_equal(v.commit_trace, solo.commit_trace)
+        np.testing.assert_array_equal(v.age_trace, solo.age_trace)
+        np.testing.assert_array_equal(v.latency_all, solo.latency_all)
+        np.testing.assert_array_equal(v.global_loss, solo.global_loss)
+
+
+@pytest.mark.parametrize("buffer", [1, 2, None])
+def test_async_cum_time_monotonic_under_churn(buffer):
+    """The buffered server never waits longer than the eq.-9 barrier:
+    async cumulative simulated time <= sync, pinned under the straggler
+    scenario for every commit batch size (the satellite monotonicity
+    check)."""
+    for seed in (0, 1):
+        cfg = _cfg(rounds=10, seed=seed, scenario="churn")
+        sync = run_simulation(cfg, engine="scan", ra_backend=RA_BACKEND)
+        asy = run_simulation(
+            SimConfig(**{**_SMALL, "rounds": 10, "seed": seed,
+                         "scenario": "churn",
+                         "aggregation": AsyncAggregation(buffer=buffer)}),
+            ra_backend=RA_BACKEND)
+        assert asy.cum_time_s[-1] <= sync.cum_time_s[-1]
+        assert (asy.latency_all >= 0).all()
+
+
+@pytest.mark.parametrize("buffer,scenario", [(1, "urban"), (2, "churn"),
+                                             (2, "static")])
+def test_async_event_protocol_replay(buffer, scenario):
+    """Away from the degenerate limit, the recorded event traces must
+    replay exactly through the engine's own commit rule: virtual clocks
+    are driven by the Γ dispatch times, commits and latencies re-derive
+    bit-for-bit, and the device-indexed buffer never overflows."""
+    cfg = SimConfig(**{**_SMALL, "rounds": 12, "scenario": scenario,
+                       "aggregation": AsyncAggregation(buffer=buffer)})
+    hist = run_simulation(cfg, ra_backend=RA_BACKEND)
+    _replay_protocol(hist, cfg.n_devices, cfg.n_subchannels, buffer)
+    # Dispatch times come from Γ: positive and finite wherever dispatched.
+    rd = hist.async_trace["rem_dispatch"]
+    assert np.isfinite(rd).all()
+    assert (rd[hist.tx_trace] > 0).all()
+
+
+def test_uniform_clocks_any_buffer_degenerates_to_sync(monkeypatch):
+    """With uniform per-device clocks every upload of an event ties, so
+    ANY buffer size commits the whole dispatch together — the async
+    engine collapses to the synchronous barrier even at buffer=1.
+    Uniform clocks are forced by flattening the solved Γ to a constant
+    (the world, randomness, and energies are otherwise untouched; the
+    scenario must be slowdown-free — `apply_dynamics` re-stretches Γ
+    per device under stragglers, which is exactly non-uniform clocks)."""
+    from repro.fl import sim as sim_mod
+
+    orig = sim_mod._solve_horizons
+
+    def flat_gamma(preps, backend):
+        ras, secs = orig(preps, backend)
+        flat = []
+        for ra in ras:
+            t = np.where(ra.feasible, 1.0, np.inf)
+            flat.append(type(ra)(tau=ra.tau, p=ra.p, time_s=t,
+                                 energy_j=ra.energy_j, feasible=ra.feasible,
+                                 iterations=ra.iterations))
+        return flat, secs
+
+    monkeypatch.setattr(sim_mod, "_solve_horizons", flat_gamma)
+    cfg = _cfg(scenario="static")
+    sync = run_simulation(cfg, engine="scan", ra_backend=RA_BACKEND)
+    asy = run_simulation(
+        SimConfig(**{**_SMALL, "scenario": "static",
+                     "aggregation": AsyncAggregation(buffer=1)}),
+        ra_backend=RA_BACKEND)
+    _assert_bit_exact(sync, asy)
+
+
+def test_unknown_aggregation_rejected():
+    with pytest.raises(ValueError):
+        run_many([_cfg(aggregation="warp")], engine="scan")
+    with pytest.raises(ValueError):
+        AsyncAggregation(buffer=0)
+    with pytest.raises(ValueError):
+        AsyncAggregation(staleness="exp")

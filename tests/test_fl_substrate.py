@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # per-test skip without hypothesis
 
 from repro.core import RoundPolicy
 from repro.data.fl_datasets import make_dataset, partition_imbalanced_iid

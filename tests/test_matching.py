@@ -1,8 +1,7 @@
 """Algorithm 2 (swap matching): stability (Def. 3), convergence, quality."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # per-test skip without hypothesis
 
 from repro.core import (
     U_MAX,

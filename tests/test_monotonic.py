@@ -1,8 +1,7 @@
 """Algorithm 1 (polyblock outer approximation) vs the brute-force oracle."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # per-test skip without hypothesis
 
 from repro.core import WirelessConfig, fixed_ra, grid_oracle, is_infeasible, solve_pairs
 from repro.core.wireless import total_energy, total_time

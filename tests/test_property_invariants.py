@@ -11,9 +11,8 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # per-test skip without hypothesis
 
 from repro.core import (
     aou_weights,

@@ -1,6 +1,7 @@
 """Trace-statistics property tests for the scenario processes
 (hypothesis-guarded, following the tests/test_property_invariants.py
-convention: the whole module skips cleanly without hypothesis).
+convention: each @given test skips individually without hypothesis,
+via the tests/_hyp.py shim).
 
 Pins the distributional contracts documented in
 src/repro/scenarios/processes.py:
@@ -18,8 +19,7 @@ src/repro/scenarios/processes.py:
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # per-test skip without hypothesis
 
 from repro.core import WirelessConfig
 from repro.scenarios import (

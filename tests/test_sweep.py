@@ -73,6 +73,26 @@ def test_spec_rejects_bad_inputs():
         SweepSpec(name="t", overrides={"typo_field": 1})
     with pytest.raises(ValueError):
         SweepSpec(name="t", ds="unknown-scheme")
+    with pytest.raises(ValueError):
+        SweepSpec(name="t", aggregation="warp")
+    with pytest.raises(ValueError):                       # grid axis too
+        SweepSpec(name="t", overrides={"aggregation": "async"})
+
+
+def test_spec_aggregation_axis():
+    """The aggregation axis expands between scenario and policy, keeps
+    "sync" ids unchanged (committed artifacts stay addressable), and
+    round-trips through JSON."""
+    spec = SweepSpec(name="t", ds="alg3", seeds=(0,), rounds=4,
+                     n_devices=8, n_subchannels=3,
+                     aggregation=("sync", "async"))
+    cells = spec.cells()
+    assert spec.n_cells == len(cells) == 2
+    assert cells[0].cell_id == "mnist-N8-K3-alg3.mo.matching-s0"
+    assert cells[1].cell_id == "mnist-N8-K3-async-alg3.mo.matching-s0"
+    assert cells[0].config.aggregation == "sync"
+    assert cells[1].config.aggregation == "async"
+    assert SweepSpec.from_json(spec.to_json()) == spec
 
 
 # --------------------------------------------------------------------------
@@ -100,6 +120,10 @@ def test_prep_key_shares_worlds_only_across_policies():
     base = SimConfig(rounds=4, **TINY)
     assert _prep_key(base) == _prep_key(
         dataclasses.replace(base, policy=RoundPolicy(ds="fixed", ra="fix")))
+    # ... and across aggregation disciplines: sync vs async cells of one
+    # seed share the sampled world and Γ solve (the differential setup).
+    assert _prep_key(base) == _prep_key(
+        dataclasses.replace(base, aggregation="async"))
     assert _prep_key(base) != _prep_key(dataclasses.replace(base, seed=1))
     assert _prep_key(base) != _prep_key(
         dataclasses.replace(base, n_devices=32))
@@ -250,6 +274,32 @@ def test_facets_split_heterogeneous_records(tmp_path):
     homo = _toy_record([("mnist", 8, 2, "mo", "matching", "alg3", s)
                         for s in (0, 1)])
     assert [f.suffix for f in facets(homo)] == ["mnist"]
+
+
+def test_fig_time_to_target_refuses_pooling(tmp_path):
+    """The sync-vs-async headline figure averages SEEDS only: records
+    varying ra/sa (or shape/dataset) within the chosen ds render nothing
+    rather than pooling configurations that were never co-simulated."""
+    from repro.experiments import fig_time_to_target
+
+    def cell(agg, ra, seed, t2t):
+        return {"dataset": "mnist", "n_devices": 8, "n_subchannels": 3,
+                "scenario": "static", "aggregation": agg, "seed": seed,
+                "policy": {"ds": "alg3", "ra": ra, "sa": "matching",
+                           "label": "x"},
+                "metrics": {"time_to_target_s": t2t},
+                "curves": {}, "trace": {}}
+
+    homogeneous = {"cells": [cell("sync", "mo", 0, 10.0),
+                             cell("sync", "mo", 1, 12.0),
+                             cell("async", "mo", 0, 2.0),
+                             cell("async", "mo", 1, 3.0)]}
+    assert fig_time_to_target(homogeneous, tmp_path) is not None
+    mixed_ra = {"cells": homogeneous["cells"]
+                + [cell("sync", "fix", 0, 99.0)]}
+    assert fig_time_to_target(mixed_ra, tmp_path) is None
+    sync_only = {"cells": [cell("sync", "mo", 0, 10.0)]}
+    assert fig_time_to_target(sync_only, tmp_path) is None
 
 
 def test_group_mean_curves_refuses_ambiguity():

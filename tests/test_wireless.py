@@ -1,8 +1,7 @@
 """System model (eqs. 1-10) + Propositions 1-2."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
-from hypothesis import given, strategies as st
+from _hyp import given, st  # per-test skip without hypothesis
 
 from repro.core import (
     WirelessConfig,
