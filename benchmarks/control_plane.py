@@ -33,6 +33,17 @@ the perf trajectory is machine-readable across PRs.  Acceptance rows:
     a one-rep full-buffer run pinning the degenerate limit's transmitted
     sets against the scan engine at benchmark scale.  Recorded, not
     gated.
+  * `polyblock_fused` — the staged fused Γ driver (`solve_pairs_fused`,
+    mixed-precision projections) vs the step driver (`solve_pairs_jit`,
+    the previous whole-horizon path) at N in {512, 4096, 32768} devices
+    x K=4 sub-channels.  Timed as min over FUSED_REPS *interleaved*
+    rounds (A,B,A,B,... — back-to-back mins, not per-solver batches, so
+    a background hiccup hits both solvers equally on this noisy 2-core
+    box).  Gates: >= 2x at N=4096 with <= 1e-6 max relative time_s
+    difference, and `roofline_pct` (measured against the analytic
+    op/byte bound of `launch.analytic.polyblock_solve_cost`) >= 3% — an
+    absolute tripwire that catches a slow solver even when both measured
+    paths degrade together.
 """
 from __future__ import annotations
 
@@ -48,9 +59,11 @@ from repro.core import (
     sample_channel_gains,
     sample_topology,
     solve_pairs,
+    solve_pairs_fused,
     solve_pairs_jit,
 )
 from repro.fl import SimConfig, run_many, run_simulation
+from repro.launch.analytic import polyblock_solve_cost, roofline_pct
 from repro.scenarios import apply_dynamics, generate_traces
 
 from .common import emit
@@ -58,6 +71,13 @@ from .common import emit
 K = 4
 HORIZON_ROUNDS = 100
 HORIZON_N = 512
+
+FUSED_NS = (512, 4096, 32768)
+FUSED_GATE_N = 4096
+FUSED_REPS = 7
+FUSED_TARGET_SPEEDUP = 2.0
+FUSED_TARGET_REL = 1e-6
+FUSED_TARGET_ROOFLINE_PCT = 3.0
 
 SCN_ROUNDS = 100
 SCN_N = 128
@@ -141,6 +161,49 @@ def run(json_path: str | None = None):
         "speedup": speedup, "max_rel_diff": agree,
         "target_speedup": 10.0, "meets_target": bool(speedup >= 10.0),
     }
+
+    # ---- acceptance: fused staged Γ driver vs the step driver -------------
+    record["polyblock_fused"] = {}
+    for n in FUSED_NS:
+        cfg, beta, h2 = _setup(n, 1, seed=3)
+        solve_pairs_jit(beta[None, :], h2[0], cfg)           # warm both jits
+        fused = solve_pairs_fused(beta[None, :], h2[0], cfg)
+        step = solve_pairs_jit(beta[None, :], h2[0], cfg)
+        t_step, t_fused = [], []
+        for _ in range(FUSED_REPS):                          # interleaved
+            t0 = time.time()
+            step = solve_pairs_jit(beta[None, :], h2[0], cfg)
+            t_step.append(time.time() - t0)
+            t0 = time.time()
+            fused = solve_pairs_fused(beta[None, :], h2[0], cfg)
+            t_fused.append(time.time() - t0)
+        ts, tf = min(t_step), min(t_fused)
+        agree = _agreement(step.time_s, fused, step.feasible)
+        iters_eq = bool(np.array_equal(step.iterations, fused.iterations))
+        speedup = ts / tf
+        pct = roofline_pct(tf, polyblock_solve_cost(K * n, solver="fused"))
+        rows.append([f"polyblock/step/N{n}", round(ts * 1e6, 1),
+                     f"{K}x{n} pairs"])
+        rows.append([f"polyblock/fused/N{n}", round(tf * 1e6, 1),
+                     f"{speedup:.2f}x, agree={agree:.1e}, "
+                     f"roofline={pct:.1f}%"])
+        gated = n == FUSED_GATE_N
+        record["polyblock_fused"][f"N{n}"] = {
+            "pairs": K * n, "reps": FUSED_REPS,
+            "step_s": ts, "fused_s": tf,
+            "step_s_all": t_step, "fused_s_all": t_fused,
+            "speedup": speedup, "max_rel_diff": agree,
+            "iterations_equal": iters_eq,
+            "roofline_pct": pct,
+            "target_rel": FUSED_TARGET_REL,
+            "meets_rel": bool(agree <= FUSED_TARGET_REL),
+            **({"target_speedup": FUSED_TARGET_SPEEDUP,
+                "target_roofline_pct": FUSED_TARGET_ROOFLINE_PCT,
+                "meets_target": bool(speedup >= FUSED_TARGET_SPEEDUP
+                                     and agree <= FUSED_TARGET_REL
+                                     and pct >= FUSED_TARGET_ROOFLINE_PCT)}
+               if gated else {}),
+        }
 
     # ---- acceptance: fused scan round loop vs host loop, 8-seed sweep -----
     cfgs = [SimConfig(seed=s, policy=RoundPolicy(ra="fix"), **SWEEP_CFG)

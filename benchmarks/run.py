@@ -29,6 +29,25 @@ from . import (
 
 CONTROL_PLANE_JSON = "BENCH_control_plane.json"
 
+
+def _failed_gates(record, prefix=""):
+    """Walk a benchmark record for `meets_target`/`meets_rel` False flags.
+
+    The control-plane record marks each acceptance row with a boolean gate
+    (horizon speedup, sweep grid, fused polyblock speedup/agreement/roofline
+    floor).  Any False is a perf regression the bench must surface as a
+    nonzero exit, not just a table row (ISSUE: "fail the bench if the fused
+    solve regresses below target").
+    """
+    bad = []
+    if isinstance(record, dict):
+        for k, v in record.items():
+            if k in ("meets_target", "meets_rel") and v is False:
+                bad.append(f"{prefix}{k}")
+            else:
+                bad.extend(_failed_gates(v, f"{prefix}{k}."))
+    return bad
+
 ALL = {
     "fig3_global_loss": fig3_global_loss.run,
     "fig4_ablation": fig4_ablation.run,
@@ -53,16 +72,22 @@ def main() -> None:
         runners["control_plane"] = lambda: control_plane.run(
             json_path=CONTROL_PLANE_JSON)
     t0 = time.time()
+    failed = []
     for name, fn in runners.items():
         if only and name != only:
             continue
         t = time.time()
         try:
-            fn()
+            record = fn()
         except Exception as e:  # noqa: BLE001
             print(f"#table,{name}\nERROR,{type(e).__name__}: {e}")
+        else:
+            failed += [f"{name}: {g}" for g in _failed_gates(record)]
         print(f"# {name} took {time.time()-t:.1f}s\n")
     print(f"# total {time.time()-t0:.1f}s")
+    if failed:
+        print("# GATE FAILURES:\n" + "\n".join(f"#   {g}" for g in failed))
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -35,7 +35,7 @@ from .leader_jax import (
     swap_matching_jnp,
 )
 from .monotonic import RAResult, fixed_ra, grid_oracle, solve_pairs
-from .monotonic_jax import precompute_gamma, solve_pairs_jit
+from .monotonic_jax import precompute_gamma, solve_pairs_fused, solve_pairs_jit
 from .selection import (
     SelectionOutcome,
     priority_list,
@@ -86,7 +86,7 @@ __all__ = [
     "swap_matching_jnp",
     # monotonic / monotonic_jax (Algorithm 1)
     "RAResult", "solve_pairs", "fixed_ra", "grid_oracle",
-    "solve_pairs_jit", "precompute_gamma",
+    "solve_pairs_jit", "solve_pairs_fused", "precompute_gamma",
     # selection (Algorithm 3 + Sec.-VI benchmark schemes)
     "SelectionOutcome", "priority_list", "select_aou_alg3", "select_topk",
     "select_random", "select_cluster", "select_fixed",

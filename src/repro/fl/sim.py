@@ -82,6 +82,7 @@ from ..core import (
     make_clusters,
     participation_deficit,
     plan_round,
+    solve_pairs_fused,
     solve_pairs_jit,
 )
 from ..core.monotonic import fixed_ra
@@ -311,7 +312,8 @@ def _prepare(cfg: SimConfig, _data_cache: dict | None = None) -> _Prepared:
 
 
 def _solve_horizons(
-    preps: Sequence[_Prepared], backend: str | None
+    preps: Sequence[_Prepared], backend: str | None,
+    solver: str = "fused", shard: bool | None = None,
 ) -> tuple[list[RAResult], list[float]]:
     """Algorithm 1 for every round of every prepared simulation, batched.
 
@@ -324,6 +326,12 @@ def _solve_horizons(
     the solver's per-element e_max operand.  Returns the per-sim RAResults
     and each sim's share of planning wall time (group time split
     proportionally to its pair count).
+
+    solver: "fused" (default — `solve_pairs_fused`, staged whole-loop jit
+    with optional device-axis row sharding via `shard`) or "step"
+    (`solve_pairs_jit`, the per-iteration phase-split driver).  shard is
+    forwarded to the fused driver only (the step driver has no row-shard
+    path); None auto-shards when more than one local device is visible.
 
     Sims sharing a `_Prepared` world (policy-only variants deduped by
     `run_many`) and the same `policy.ra` have identical Γ by construction:
@@ -367,8 +375,13 @@ def _solve_horizons(
                             preps[i].h2_all.shape).reshape(-1)
             for i in mo])
         t0 = time.time()
-        ra_flat = solve_pairs_jit(beta_cat, h2_cat, preps[mo[0]].wcfg,
-                                  emax_cat, backend=backend)
+        if solver == "fused":
+            ra_flat = solve_pairs_fused(beta_cat, h2_cat, preps[mo[0]].wcfg,
+                                        emax_cat, backend=backend,
+                                        shard=shard)
+        else:
+            ra_flat = solve_pairs_jit(beta_cat, h2_cat, preps[mo[0]].wcfg,
+                                      emax_cat, backend=backend)
         group_s = time.time() - t0
         group_pairs = h2_cat.size
         off = 0
@@ -860,6 +873,7 @@ def _run_group_async(cfgs: Sequence[SimConfig], preps: Sequence[_Prepared],
 
 def run_many(cfgs: Sequence[SimConfig], *,
              ra_backend: str | None = None,
+             ra_solver: str = "fused",
              engine: str = "loop",
              shard: bool | None = None) -> list[SimHistory]:
     """Run several simulations, sharing ONE batched whole-horizon Γ solve.
@@ -881,6 +895,9 @@ def run_many(cfgs: Sequence[SimConfig], *,
       cfgs: the simulations to run; results are returned in the same order.
       ra_backend: projection backend for the Γ solver (None = default;
         see `kernels.polyblock_project.ops`).
+      ra_solver: "fused" (default — staged whole-loop Γ driver with
+        device-axis row sharding when `shard` allows) or "step" (the
+        per-iteration phase-split driver); see `core.monotonic_jax`.
       engine: "loop" (host round loop), "scan" (device-resident), or
         "async" (buffered event-timeline loop, DESIGN.md §12).  Cells
         whose `SimConfig.aggregation` names an async commit policy route
@@ -889,14 +906,17 @@ def run_many(cfgs: Sequence[SimConfig], *,
         every cell through the event engine, where "sync"-aggregation
         cells run the degenerate full-buffer barrier and reproduce the
         scan engine bit-exactly.
-      shard: shard the scan/async engines' batch axis across local
-        devices via `shard_map`.  None (default) auto-enables sharding
-        when more than one local device is visible; False forces
-        single-device `vmap`; True asks for sharding (a no-op on one
-        device).  Ignored by engine="loop".
+      shard: shard the scan/async engines' batch axis — and the fused Γ
+        solve's row axis — across local devices via `shard_map`.  None
+        (default) auto-enables sharding when more than one local device
+        is visible; False forces single-device `vmap`; True asks for
+        sharding (a no-op on one device).  Ignored by engine="loop"
+        (the Γ solve still shards).
     """
     if engine not in ("loop", "scan", "async"):
         raise ValueError(f"unknown engine: {engine}")
+    if ra_solver not in ("fused", "step"):
+        raise ValueError(f"unknown ra_solver: {ra_solver}")
     if shard is None:
         shard = jax.local_device_count() > 1
     # Per-cell execution mode: an async aggregation spec overrides the
@@ -920,7 +940,8 @@ def run_many(cfgs: Sequence[SimConfig], *,
         preps.append(shared if shared.cfg == c
                      else dataclasses.replace(shared, cfg=c))
 
-    ras, plan_walls = _solve_horizons(preps, ra_backend)
+    ras, plan_walls = _solve_horizons(preps, ra_backend,
+                                      solver=ra_solver, shard=shard)
     # Scenario dynamics (DESIGN.md §11): churn availability knocks out
     # Prop-1 feasibility, straggler slowdowns stretch the eq.-1 compute
     # share of Γ — folded into the whole-horizon RAResult ONCE, before
@@ -958,6 +979,7 @@ def run_many(cfgs: Sequence[SimConfig], *,
 
 
 def run_simulation(cfg: SimConfig, *, ra_backend: str | None = None,
+                   ra_solver: str = "fused",
                    engine: str = "loop") -> SimHistory:
     """Run ONE simulation (the trajectory behind one curve of Figs. 3-9).
 
@@ -968,4 +990,5 @@ def run_simulation(cfg: SimConfig, *, ra_backend: str | None = None,
     consume identical randomness and pre-solved traces — DESIGN.md §8,
     §12).
     """
-    return run_many([cfg], ra_backend=ra_backend, engine=engine)[0]
+    return run_many([cfg], ra_backend=ra_backend, ra_solver=ra_solver,
+                    engine=engine)[0]

@@ -1,0 +1,3 @@
+from .ops import polyblock_solve_fused
+
+__all__ = ["polyblock_solve_fused"]

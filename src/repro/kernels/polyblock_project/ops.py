@@ -32,7 +32,7 @@ from .kernel import polyblock_project_call
 from .ref import TINY, project_ref
 
 __all__ = ["polyblock_project", "project_jnp", "project_newton",
-           "project_pallas"]
+           "project_newton_mixed", "project_pallas"]
 
 
 def _on_tpu() -> bool:
@@ -121,6 +121,147 @@ def project_newton(v, beta, h2, e_max, cfg: WirelessConfig, *,
     return zeta[..., None] * v
 
 
+def project_newton_mixed(v, beta, h2, e_max, cfg: WirelessConfig, *,
+                         n_f32: int = 6, n_f64: int = 2, x0_hint=None):
+    """Mixed-precision Newton: fp32 bulk iterations + fp64 polish.
+
+    The fp32-accumulation study behind the fused solver (DESIGN.md §13):
+    the safeguarded log-space Newton loop is precision-agnostic, and on CPU
+    the fp32 `log1p`/`exp` run at twice the SIMD width of fp64, so the bulk
+    of the bracket contraction is done in fp32 (rel error ~1e-7 at the f32
+    root), then `n_f64` safeguarded fp64 steps restart from that root —
+    Newton's quadratic convergence turns 1e-7 into ~1e-14 in one engaged
+    step, so the polished root matches `project_newton`'s to ~1e-12
+    relative.  The `need_root` boundary test (g(v) > 0) runs in fp64:
+    pairs with g(v) within fp32 noise of zero must classify exactly like
+    the reference, or a spurious projection shifts the vertex by ~1e-7.
+
+    Only sound where the fp32 loop lands inside the basin of quadratic
+    convergence — the warm start (exact low-SNR root) makes that hold at
+    Table-I physics; the fp64 safeguard bracket keeps stragglers convergent
+    rather than wrong.  tests/test_monotonic_jax.py pins this to the f64
+    backends at 1e-9.
+    """
+    v64 = jnp.asarray(v)
+    tau_v, p_v = v64[..., 0], v64[..., 1]
+    a = cfg.kappa0 * cfg.mu_cycles * beta * (tau_v * cfg.cpu_hz) ** 2
+    b = p_v * cfg.pt_w * cfg.model_bits * np.log(2.0) / cfg.bandwidth_hz
+    c = p_v * h2
+
+    def g_gp(x):
+        u = c * x
+        el = jnp.log1p(u)
+        elc = jnp.maximum(el, 1e-300)
+        g = a * x * x + b * x / elc - e_max
+        gp = 2.0 * a * x + b * (el - u / (1.0 + u)) / (elc * elc)
+        return g, gp
+
+    # fp32 bulk: same loop as project_newton, all operands cast down.
+    f32 = jnp.float32
+    a32, b32, c32 = a.astype(f32), b.astype(f32), c.astype(f32)
+    e32 = jnp.asarray(e_max).astype(f32)
+
+    def g_gp32(x):
+        u = c32 * x
+        el = jnp.log1p(u)
+        elc = jnp.maximum(el, f32(1e-38))
+        g = a32 * x * x + b32 * x / elc - e32
+        gp = 2.0 * a32 * x + b32 * (el - u / (1.0 + u)) / (elc * elc)
+        return g, gp
+
+    # Warm start, regime-split.  `project_newton` starts every row at the
+    # low-SNR-limit root sqrt(q / a), q = e_max - b/c — exact when the
+    # quadratic compute term dominates, but near the Prop-1 feasibility
+    # boundary the root drops to ~1e-3 where the *linear* comm correction
+    # dominates (a x^2 << b x / 2) and the sqrt start overshoots by orders
+    # of magnitude (those rows are why the cold loop needs 14 steps).  One
+    # order deeper, L(u) = u (1 - u/2) + O(u^3) flattens the constraint to
+    # a x^2 + (b/2) x - q = 0, whose positive root (Muller's form,
+    # cancellation-free as either coefficient vanishes) is near-exact
+    # precisely when its own expansion variable u = c x stays small — so
+    # each row picks the quadratic start when it is self-consistent
+    # (c x_quad < 1/2) and the sqrt start otherwise.
+    q = jnp.maximum(e32 - b32 / jnp.maximum(c32, f32(1e-38)), f32(1e-38))
+    bh = 0.5 * b32
+    a_s = jnp.maximum(a32, f32(1e-38))
+    x_quad = 2.0 * q / (bh + jnp.sqrt(bh * bh + 4.0 * a_s * q))
+    x_sqrt = jnp.sqrt(q / a_s)
+    x0 = jnp.where(c32 * x_quad < 0.5, x_quad, x_sqrt)
+    if x0_hint is not None:
+        # Polyblock children shrink one coordinate of their parent, and the
+        # per-device energy of eq. (10) is increasing in both tau and p, so
+        # g_child <= g_parent pointwise and the parent's root zeta_par is a
+        # lower bound on the child's: starting at max(low-SNR root,
+        # zeta_par) puts every row inside the quadratic basin (the root
+        # moved *up* from a known point), where the cold start is only exact
+        # in the low-SNR limit.  Non-finite hints (retired rows carry junk
+        # slots) fall back to the cold start.
+        h32 = jnp.asarray(x0_hint).astype(f32)
+        x0 = jnp.where(jnp.isfinite(h32), jnp.maximum(x0, h32), x0)
+    x0 = jnp.clip(x0, f32(TINY), f32(1.0 - 1e-7))
+
+    def body32(_, carry):
+        # Boundary-EQUAL candidates are accepted (>=): at fp32 convergence
+        # g rounds to exactly 0, the bracket endpoint is set to x itself,
+        # and cand == x == lo — the strict test would hand a converged root
+        # to the geometric fallback, which hurls it to sqrt(root * 1).
+        lo, hi, x = carry
+        g, gp = g_gp32(x)
+        pos = g > 0.0
+        lo = jnp.where(pos, lo, x)
+        hi = jnp.where(pos, x, hi)
+        cand = x * jnp.exp(-g / (x * gp))
+        ok = (cand >= lo) & (cand <= hi)
+        return lo, hi, jnp.where(ok, cand, jnp.sqrt(lo * hi))
+
+    lo32 = jnp.full_like(x0, f32(TINY))
+    hi32 = jnp.ones_like(x0)
+    _, _, x32 = jax.lax.fori_loop(0, n_f32, body32, (lo32, hi32, x0))
+
+    # fp64 polish: fresh safeguard bracket, start at the fp32 root.  Unlike
+    # the cold-start loop, the fallback *keeps x* rather than jumping to the
+    # bracket's geometric mean: at exact convergence the Newton candidate
+    # rounds onto a bracket endpoint (cand == x == lo or hi), and with only
+    # a handful of polish steps the bracket can still be one-sided, so the
+    # geometric fallback would hurl a converged root to sqrt(root * 1).
+    # Boundary-equal candidates are accepted (>=); NaN/runaway candidates
+    # fail the comparison and leave x unchanged.
+    need_root = g_gp(jnp.ones_like(tau_v))[0] > 0.0
+    x = jnp.clip(x32.astype(tau_v.dtype), TINY, 1.0 - 1e-12)
+
+    def body64(_, carry):
+        # Halley instead of Newton: g'' is algebraic once log1p(u) is in
+        # hand — with F = x / L and w = u / (1 + u),
+        #   F'' = c t (1 - t) / L^2 - 2 c t (L - w) / L^3,   t = 1/(1 + u),
+        # so the third-order step costs the same single transcendental as a
+        # Newton step (and skips the log-space exp: the fp32 bulk already
+        # landed near the root, where the linear step is safe inside the
+        # bracket).  Cubic convergence turns the bulk's ~1e-4 into ~1e-12
+        # in ONE engaged step where Newton needs two.
+        lo, hi, x = carry
+        u = c * x
+        el = jnp.log1p(u)
+        elc = jnp.maximum(el, 1e-300)
+        t1 = 1.0 / (1.0 + u)
+        w = u * t1
+        g = a * x * x + b * x / elc - e_max
+        gp = 2.0 * a * x + b * (el - w) / (elc * elc)
+        g2 = 2.0 * a + b * c * t1 * ((1.0 - t1) / (elc * elc)
+                                     - 2.0 * (el - w) / (elc * elc * elc))
+        pos = g > 0.0
+        lo = jnp.where(pos, lo, x)
+        hi = jnp.where(pos, x, hi)
+        cand = x - 2.0 * g * gp / (2.0 * gp * gp - g * g2)
+        ok = (cand >= lo) & (cand <= hi)
+        return lo, hi, jnp.where(ok, cand, x)
+
+    lo = jnp.full_like(tau_v, TINY)
+    hi = jnp.ones_like(tau_v)
+    _, _, x = jax.lax.fori_loop(0, n_f64, body64, (lo, hi, x))
+    zeta = jnp.where(need_root, jnp.clip(x, TINY, 1.0), 1.0)
+    return zeta[..., None] * v64
+
+
 def project_pallas(v, beta, h2, e_max, cfg: WirelessConfig, *,
                    n_bisect: int = 60, bm: int = 8, interpret: bool | None = None):
     """Pad + tile the flattened batch to (rows, 128) and run the kernel."""
@@ -160,7 +301,8 @@ def polyblock_project(v, beta, h2, e_max, cfg: WirelessConfig, *,
     """Project a batch of vertices.
 
     backend: None (auto: "pallas" on TPU else "newton"), "ref", "bisect"
-    (alias "jnp"), "newton", or "pallas".
+    (alias "jnp"), "newton", "mixed" (fp32-bulk/fp64-polish Newton, the
+    fused solver's CPU default), or "pallas".
     """
     if backend is None:
         backend = "pallas" if _on_tpu() else "newton"
@@ -170,6 +312,8 @@ def polyblock_project(v, beta, h2, e_max, cfg: WirelessConfig, *,
         return project_jnp(jnp.asarray(v), beta, h2, e_max, cfg, n_bisect=n_bisect)
     if backend == "newton":
         return project_newton(jnp.asarray(v), beta, h2, e_max, cfg)
+    if backend == "mixed":
+        return project_newton_mixed(jnp.asarray(v), beta, h2, e_max, cfg)
     if backend == "pallas":
         return project_pallas(v, beta, h2, e_max, cfg,
                               n_bisect=n_bisect, interpret=interpret)

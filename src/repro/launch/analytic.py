@@ -23,7 +23,9 @@ import dataclasses
 from ..configs.base import ArchConfig, InputShape
 from ..models.moe import CAPACITY_FACTOR
 
-__all__ = ["HW", "analytic_cost", "model_flops", "param_counts"]
+__all__ = ["HW", "analytic_cost", "model_flops", "param_counts",
+           "OpCount", "CpuHW", "CPU_HW", "g_eval_ops", "projection_ops",
+           "polyblock_solve_cost", "roofline_pct"]
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -290,3 +292,232 @@ def analytic_cost(cfg: ArchConfig, shape: InputShape, hw: HW = HW(),
         "params_total": param_counts(cfg)["total"],
         "params_active": param_counts(cfg)["active"],
     }
+
+
+# --------------------------------------------------------------------------
+# Control plane: analytic op/byte model of the Algorithm-1 solvers.
+#
+# The learning-plane model above prices matmuls against a TPU; the control
+# plane is branchy elementwise math on a small CPU box, so its roofline
+# needs a different op taxonomy (transcendentals and divides dominate, not
+# MACs) and CPU hardware constants.  `benchmarks/control_plane.py` turns
+# these predictions into "% of roofline" gates for BENCH_control_plane.json:
+# a percentage against a fixed analytic bound is an *absolute* regression
+# tripwire, where a wall-clock ratio of two measured runs on a noisy 2-core
+# container moves with every scheduling hiccup.
+#
+# Conventions (documented, deliberately round):
+#   * costs are in ADD-EQUIVALENTS per element at full SIMD width — weights
+#     are x86 AVX2 reciprocal throughputs relative to a vector add:
+#     add/mul/fma-half/select/compare/min/max = 1, divide/sqrt = 4,
+#     vectorized log1p = 12, vectorized exp = 10 (SVML/sleef-class);
+#   * f32 runs at twice the f64 SIMD width, priced via `CpuHW.flops_f32`;
+#   * memory traffic counts the state actually streamed per polyblock
+#     iteration (the five vertex-store leaves, read + write, plus the
+#     wireless operands), not allocator churn.
+# --------------------------------------------------------------------------
+
+OP_WEIGHTS = {"adds": 1.0, "muls": 1.0, "cmps": 1.0, "selects": 1.0,
+              "minmax": 1.0, "divs": 4.0, "sqrts": 4.0,
+              "log1ps": 12.0, "exps": 10.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCount:
+    """Typed op tally for one element (one (pair, vertex) lane)."""
+
+    adds: float = 0.0
+    muls: float = 0.0
+    divs: float = 0.0
+    sqrts: float = 0.0
+    minmax: float = 0.0
+    cmps: float = 0.0
+    selects: float = 0.0
+    log1ps: float = 0.0
+    exps: float = 0.0
+
+    def __add__(self, o: "OpCount") -> "OpCount":
+        return OpCount(**{f.name: getattr(self, f.name) + getattr(o, f.name)
+                          for f in dataclasses.fields(self)})
+
+    def __mul__(self, k: float) -> "OpCount":
+        return OpCount(**{f.name: getattr(self, f.name) * k
+                          for f in dataclasses.fields(self)})
+
+    __rmul__ = __mul__
+
+    def weighted(self) -> float:
+        """Total cost in add-equivalents (see OP_WEIGHTS)."""
+        return sum(OP_WEIGHTS[f.name] * getattr(self, f.name)
+                   for f in dataclasses.fields(self))
+
+    def to_dict(self) -> dict:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+
+@dataclasses.dataclass(frozen=True)
+class CpuHW:
+    """The benchmark container: 2 cores of an AVX2-class x86 server part.
+
+    peak = cores x (256-bit lanes) x 2 (FMA) x ports x clock; the control
+    plane's op mix has few fuseable MACs, so `flops_*` deliberately prices
+    ONE port (the second FMA port is idle on select/compare chains).  The
+    constants are round numbers, not a measured machine: the roofline gate
+    compares runs of the SAME model over time, so only consistency matters.
+    """
+
+    cores: int = 2
+    ghz: float = 3.0
+    simd_f64: int = 4          # AVX2 256-bit lanes
+    mem_gbps: float = 16.0     # container-visible stream bandwidth
+
+    @property
+    def flops_f64(self) -> float:
+        return self.cores * self.simd_f64 * self.ghz * 1e9
+
+    @property
+    def flops_f32(self) -> float:
+        return 2.0 * self.flops_f64
+
+
+CPU_HW = CpuHW()
+
+
+def g_eval_ops() -> OpCount:
+    """One evaluation of the energy constraint g of eq. (22), as spelled in
+    `wireless.total_energy` / the kernels: u = p|h|^2 (1 mul), log1p, rate
+    (2 muls), floor max, D/rate (1 div), E^cp (4 muls), E^cm (2 muls), the
+    final adds."""
+    return OpCount(adds=2, muls=9, divs=1, minmax=1, log1ps=1)
+
+
+def _f_eval_ops() -> OpCount:
+    """One evaluation of f = -T of eq. (8) (`wireless.total_time`)."""
+    return OpCount(adds=2, muls=4, divs=2, minmax=2, log1ps=1)
+
+
+def projection_ops(kind: str = "bisect", *, n_bisect: int = 60,
+                   n_f32: int = 2, n_f64: int = 1) -> OpCount:
+    """Ops for ONE projection (eqs. 27-29) of one vertex.
+
+    kind: "bisect" (the reference 60-step halving), "newton" (the 14-step
+    safeguarded log-space Newton of `project_newton`), or "mixed" (the
+    fp32-bulk/fp64-polish Halley of `project_newton_mixed`; pass the
+    driver's n_f32/n_f64 — f32 steps are priced at half cost via the
+    doubled SIMD width, folded in here as x0.5).
+    """
+    need_root = g_eval_ops() + OpCount(cmps=1)
+    step_bk = OpCount(cmps=1, selects=2)                 # bracket update
+    if kind == "bisect":
+        step = OpCount(adds=1, muls=3) + g_eval_ops() + step_bk
+        return need_root + n_bisect * step + OpCount(selects=1, muls=2)
+    gp_extra = OpCount(adds=3, muls=5, divs=2)           # g' sharing the log1p
+    if kind == "newton":
+        step = (g_eval_ops() + gp_extra + step_bk
+                + OpCount(muls=2, divs=1, exps=1, selects=1))
+        warm = OpCount(adds=1, muls=2, divs=2, sqrts=1, minmax=3)
+        return need_root + warm + 14 * step + OpCount(selects=1, muls=2, minmax=2)
+    if kind == "mixed":
+        g2_extra = OpCount(adds=4, muls=8, divs=2)       # Halley's g''
+        f32_step = (g_eval_ops() + gp_extra + step_bk
+                    + OpCount(muls=2, divs=1, exps=1, selects=1))
+        f64_step = (g_eval_ops() + gp_extra + g2_extra + step_bk
+                    + OpCount(adds=2, muls=4, divs=1, selects=1))
+        warm = OpCount(adds=2, muls=6, divs=2, sqrts=2, minmax=5, cmps=1,
+                       selects=2)
+        return (need_root + 0.5 * (warm + n_f32 * f32_step)
+                + n_f64 * f64_step + OpCount(selects=1, muls=2, minmax=2))
+    raise ValueError(f"unknown projection kind: {kind}")
+
+
+def polyblock_solve_cost(n_pairs: int, *, solver: str = "fused",
+                         feasible_frac: float = 0.45,
+                         mean_iters: float = 2.9, store_slots: float = 6.0,
+                         pad_slack: float = 1.6, itemsize: int = 8,
+                         hw: CpuHW = CPU_HW) -> dict:
+    """Analytic compute/memory bound for one whole-horizon Γ solve.
+
+    Stage model of the drivers in `core.monotonic_jax` (and the fused
+    kernel, which runs the same trajectory):
+
+      init      — Prop-1 filter + one cold projection of (1, 1) per
+                  feasible pair;
+      select    — per iteration: masked argmax over the `store_slots`-wide
+                  store + incumbent/retirement bookkeeping;
+      children  — per iteration: two child projections + f at both + the
+                  masked one-hot store write (the store is re-streamed, so
+                  this is also where the memory term lives).
+
+    mean_iters is the empirical mean polyblock iteration count per feasible
+    pair at Table-I physics (retirement histogram: p50 = 2, mean ~2.9,
+    max ~16-24); pad_slack covers bucket padding plus the not-yet-compacted
+    retired rows that the wide stages still carry (the {1,1.25,1.5,1.75}
+    x 2^k ladder bounds pure padding at 25%, compaction lag adds the rest).
+
+    solver: "step" (`solve_pairs_jit`, newton projections), "fused"
+    (`solve_pairs_fused`, mixed projections), or "pallas" (the single
+    fused kernel: bisection projections, but the store never round-trips
+    through HBM — only the operands and results do).
+
+    Returns compute_s / memory_s / bound_s (their max), the raw op and
+    byte tallies, and the per-stage compute split.
+    """
+    if solver == "step":
+        proj = projection_ops("newton")
+        flops_rate = hw.flops_f64
+    elif solver == "fused":
+        proj = projection_ops("mixed")
+        flops_rate = hw.flops_f64
+    elif solver == "pallas":
+        proj = projection_ops("bisect")
+        flops_rate = hw.flops_f64 if itemsize == 8 else hw.flops_f32
+    else:
+        raise ValueError(f"unknown solver: {solver}")
+
+    rows = n_pairs * feasible_frac * pad_slack
+    iters = rows * mean_iters
+
+    select = store_slots * OpCount(cmps=2, selects=2) + OpCount(
+        adds=2, cmps=3, selects=6, minmax=1)
+    write = store_slots * OpCount(cmps=2, selects=5) * 2.0
+    init_ops = rows * (proj + _f_eval_ops()).weighted() \
+        + n_pairs * g_eval_ops().weighted()              # Prop-1 filter
+    select_ops = iters * select.weighted()
+    children_ops = iters * (2.0 * (proj + _f_eval_ops()).weighted()
+                            + write.weighted())
+    flops = init_ops + select_ops + children_ops
+
+    # Memory: the five store leaves (verts 2 + vproj 2 + vfval 1, plus the
+    # valid bitmask) stream read+write each iteration in the jnp drivers;
+    # the fused kernel keeps the store VMEM/register-resident and streams
+    # only operands in and results out.
+    leaf_floats = 5.125
+    if solver == "pallas":
+        bytes_ = n_pairs * (3 + 4) * itemsize
+    else:
+        bytes_ = (iters * store_slots * leaf_floats * itemsize * 2.0
+                  + iters * 3 * itemsize + n_pairs * 7 * itemsize)
+
+    compute_s = flops / flops_rate
+    memory_s = bytes_ / (hw.mem_gbps * 1e9)
+    return {
+        "solver": solver,
+        "n_pairs": n_pairs,
+        "flops_add_equiv": flops,
+        "bytes": bytes_,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "bound_s": max(compute_s, memory_s),
+        "dominant": "compute_s" if compute_s >= memory_s else "memory_s",
+        "stage_compute": {
+            "init": init_ops / flops_rate,
+            "select": select_ops / flops_rate,
+            "children": children_ops / flops_rate,
+        },
+    }
+
+
+def roofline_pct(measured_s: float, cost: dict) -> float:
+    """Percent of the analytic roofline achieved by a measured solve."""
+    return 100.0 * cost["bound_s"] / max(measured_s, 1e-12)

@@ -13,13 +13,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from functools import lru_cache
+
 from ..configs import get_config
 from ..data.pipeline import synthetic_token_batch
 from ..models.moe import ShardCtx
-from ..models.transformer import init_params, param_count
-from ..train.train_step import make_prefill_step, make_serve_step
+from ..models.transformer import forward, init_params, param_count
+from ..train.train_step import make_serve_step
 
 __all__ = ["serve_loop", "main"]
+
+
+@lru_cache(maxsize=None)
+def _jitted_steps(cfg, cache_headroom: int, ctx: ShardCtx = ShardCtx()):
+    """ONE jitted (prefill, serve) pair per (arch config, headroom).
+
+    The old driver rebuilt `jax.jit(make_prefill_step(...))` inside every
+    `serve_loop` call (and then didn't even use it — prefill went through
+    an eager `forward`), so repeated dispatches of the same arch retraced
+    and recompiled from scratch.  Hoisting the closures behind an lru_cache
+    keyed on the static arguments (ArchConfig and ShardCtx are frozen
+    dataclasses; headroom is baked into the prefill cache shape) makes the
+    second and every later dispatch reuse jax's compile cache — what the
+    sustained-service harness needs (ROADMAP).
+    """
+
+    def prefill_step(params, batch):
+        logits, _, cache = forward(cfg, params, batch, ctx, mode="prefill",
+                                   cache_headroom=cache_headroom)
+        return logits[:, -1:], cache
+
+    return jax.jit(prefill_step), jax.jit(make_serve_step(cfg, ctx))
 
 
 def serve_loop(arch: str, *, batch: int = 4, prompt_len: int = 64,
@@ -42,15 +66,10 @@ def serve_loop(arch: str, *, batch: int = 4, prompt_len: int = 64,
     if cfg.family == "audio":
         req["enc_frames"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
 
-    prefill = jax.jit(
-        lambda p, b: make_prefill_step(cfg, ctx)(p, b),
-        static_argnames=())
-    serve = jax.jit(make_serve_step(cfg, ctx))
+    prefill, serve = _jitted_steps(cfg, new_tokens, ctx)
 
-    from ..models.transformer import forward
     t0 = time.time()
-    logits, _, cache = forward(cfg, params, req, ctx, mode="prefill",
-                               cache_headroom=new_tokens)
+    logits, cache = prefill(params, req)
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     jax.block_until_ready(tok)
     t_prefill = time.time() - t0

@@ -214,8 +214,8 @@ def test_uniform_clocks_any_buffer_degenerates_to_sync(monkeypatch):
 
     orig = sim_mod._solve_horizons
 
-    def flat_gamma(preps, backend):
-        ras, secs = orig(preps, backend)
+    def flat_gamma(preps, backend, **kw):
+        ras, secs = orig(preps, backend, **kw)
         flat = []
         for ra in ras:
             t = np.where(ra.feasible, 1.0, np.inf)

@@ -186,3 +186,66 @@ def test_flash_attention_integrated_in_model():
     np.testing.assert_allclose(
         np.asarray(l_ref, np.float32), np.asarray(l_pal, np.float32),
         atol=5e-2, rtol=5e-2)
+
+
+# --------------------------------------------------------------------------
+# fused polyblock solve (whole Algorithm 1 in one kernel, DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+def _fused_solve_inputs(n=140, seed=21):
+    from repro.core import WirelessConfig
+    from repro.core.feasibility import is_infeasible
+
+    cfg = WirelessConfig()
+    rng = np.random.default_rng(seed)
+    h2 = (rng.exponential(size=n) * 3).astype(np.float64)
+    beta = rng.integers(5, 60, n).astype(np.float64)
+    keep = ~is_infeasible(h2, cfg, np.full(n, cfg.e_max_j))
+    assert keep.any()
+    return beta[keep], h2[keep], cfg
+
+
+def test_polyblock_fused_solve_interpret_vs_oracle():
+    """Kernel (f32 interpret) vs the jnp bisect driver — same Algorithm 1.
+
+    fp32-study contract (DESIGN.md §13): pairs whose retirement test
+    |Δf| <= eps is decided clear of f32 noise keep the f64 iteration
+    trajectory exactly and land within 1e-4 relative; a boundary pair
+    (|Δf| within f32 noise of eps = 0.01, ~1% of a random batch) may
+    retire one iteration early or late, and is then still pinned by the
+    eq. 26 tolerance itself: |time_s - ref| <= eps."""
+    from repro.core import solve_pairs_jit
+    from repro.kernels.polyblock_fused.ops import polyblock_solve_fused
+
+    beta, h2, cfg = _fused_solve_inputs()
+    ref = solve_pairs_jit(beta, h2, cfg, backend="bisect")
+    tau, p, time_s, iters = polyblock_solve_fused(
+        beta, h2, cfg.e_max_j, cfg, interpret=True, dtype=np.float32)
+    same = ref.iterations == np.asarray(iters)
+    assert same.mean() > 0.97, f"trajectory drift on {(~same).mean():.1%}"
+    assert np.abs(ref.iterations - np.asarray(iters)).max() <= 1
+    for got, want in ((tau, ref.tau), (p, ref.p), (time_s, ref.time_s)):
+        np.testing.assert_allclose(np.asarray(got, np.float64)[same],
+                                   want[same], rtol=1e-4, atol=0)
+    # boundary retirements stay within the polyblock tolerance itself
+    assert np.all(np.abs(np.asarray(time_s, np.float64)[~same]
+                         - ref.time_s[~same]) <= 0.01 + 1e-6)
+
+
+def test_polyblock_fused_solve_compiled_matches_interpret():
+    """Compiled-vs-interpret parity of the fused kernel (the other half of
+    the fp32 study; compiled Pallas needs a real accelerator backend)."""
+    if jax.default_backend() == "cpu":
+        pytest.skip("compiled Pallas unavailable on CPU (interpret only)")
+    from repro.kernels.polyblock_fused.ops import polyblock_solve_fused
+
+    beta, h2, cfg = _fused_solve_inputs()
+    interp = polyblock_solve_fused(beta, h2, cfg.e_max_j, cfg,
+                                   interpret=True, dtype=np.float32)
+    comp = polyblock_solve_fused(beta, h2, cfg.e_max_j, cfg,
+                                 interpret=False, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(interp[3]), np.asarray(comp[3]))
+    for a, b in zip(interp[:3], comp[:3]):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64),
+                                   rtol=1e-5, atol=0)

@@ -123,10 +123,13 @@ def test_projection_backends_agree():
         args = [jnp.asarray(x) for x in (v, beta, h2, e_max)]
         jit = np.asarray(polyblock_project(*args, CFG, backend="bisect"))
         newt = np.asarray(polyblock_project(*args, CFG, backend="newton"))
+        mixed = np.asarray(polyblock_project(*args, CFG, backend="mixed"))
     pal = np.asarray(polyblock_project(v, beta, h2, e_max, CFG,
                                        backend="pallas", interpret=True))
     assert _rel(ref, jit) < 1e-12          # same arithmetic, same order
     assert _rel(ref, newt) < 1e-6          # Newton converges to the same root
+    assert _rel(ref, mixed) < 1e-6         # f32 bulk, f64 polish (§13)
+    assert _rel(newt, mixed) < 1e-9        # polish pins to the f64 Newton root
     assert _rel(ref, pal) < 1e-4           # kernel runs float32
 
 

@@ -162,3 +162,55 @@ def test_multidevice_execution_subprocess():
     )
     assert out.returncode == 0, out.stdout + out.stderr
     assert "loss" in out.stdout
+
+
+# --------------------------------------------------------------------------
+# device-axis sharding of the whole-horizon Γ solve (DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+def test_gamma_shard_matches_vmap_single_device():
+    """shard=True on one device must go through the shard_map path and
+    still be bit-identical to the plain vmap dispatch."""
+    from repro.core import WirelessConfig, solve_pairs_fused
+
+    rng = np.random.default_rng(13)
+    n = 96
+    cfg = WirelessConfig()
+    beta = rng.integers(5, 60, n).astype(float)
+    h2 = rng.exponential(size=(4, n)) * 3
+    sh = solve_pairs_fused(beta[None, :], h2, cfg, shard=True)
+    un = solve_pairs_fused(beta[None, :], h2, cfg, shard=False)
+    for field in ("feasible", "iterations", "tau", "p", "time_s", "energy_j"):
+        np.testing.assert_array_equal(getattr(sh, field), getattr(un, field),
+                                      err_msg=field)
+
+
+@pytest.mark.slow
+def test_gamma_shard_two_devices_subprocess():
+    """shard=True on 2 forced host devices == unsharded, bit-for-bit, with
+    a pad-and-drop row count that does NOT divide the device count
+    (separate process: device count must be set before JAX initializes)."""
+    code = """
+import numpy as np
+from repro.core import WirelessConfig, solve_pairs_fused
+cfg = WirelessConfig()
+rng = np.random.default_rng(17)
+n = 77                                     # K*n odd vs 2 devices: pad-and-drop
+beta = rng.integers(5, 60, n).astype(float)
+h2 = rng.exponential(size=(3, 4, n)) * 3   # whole-horizon tensor
+sh = solve_pairs_fused(beta[None, None, :], h2, cfg, shard=True)
+un = solve_pairs_fused(beta[None, None, :], h2, cfg, shard=False)
+for field in ("feasible", "iterations", "tau", "p", "time_s", "energy_j"):
+    assert np.array_equal(getattr(sh, field), getattr(un, field),
+                          equal_nan=True), field
+print("GAMMA_SHARD_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=2"),
+               PYTHONPATH=os.path.join(REPO, "src") + os.pathsep +
+                          os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "GAMMA_SHARD_OK" in proc.stdout

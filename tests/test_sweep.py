@@ -135,13 +135,13 @@ def test_gamma_solved_once_per_world(monkeypatch):
     import repro.fl.sim as sim
 
     calls = []
-    real = sim.solve_pairs_jit
+    real = sim.solve_pairs_fused    # the ra_solver="fused" default path
 
-    def counting(beta, h2, wcfg, e_max=None, backend=None):
+    def counting(beta, h2, wcfg, e_max=None, **kw):
         calls.append(np.asarray(h2).size)
-        return real(beta, h2, wcfg, e_max, backend=backend)
+        return real(beta, h2, wcfg, e_max, **kw)
 
-    monkeypatch.setattr(sim, "solve_pairs_jit", counting)
+    monkeypatch.setattr(sim, "solve_pairs_fused", counting)
     base = SimConfig(rounds=3, n_devices=6, n_subchannels=2, **TINY)
     cfgs = [dataclasses.replace(base, policy=RoundPolicy(ds=d))
             for d in ("alg3", "random", "cluster")]
