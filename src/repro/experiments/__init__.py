@@ -20,6 +20,7 @@ end-to-end reproduction entry points.
 """
 from .metrics import (
     cumulative_latency_s,
+    eval_spacing_weights,
     mean_subchannel_utilization,
     per_round_utilization,
     rounds_to_target,
@@ -34,6 +35,7 @@ from .figures import (
     facets,
     fig_time_to_target,
     render_gallery,
+    render_service_gallery,
 )
 from .runner import SweepResult, group_mean_curves, run_sweep
 from .spec import SweepCell, SweepSpec
@@ -49,6 +51,7 @@ __all__ = [
     "time_to_target_s",
     "mean_subchannel_utilization",
     "per_round_utilization",
+    "eval_spacing_weights",
     "cumulative_latency_s",
     "summarize_cell",
     "latest_dir",
@@ -61,5 +64,6 @@ __all__ = [
     "Facet",
     "facets",
     "render_gallery",
+    "render_service_gallery",
     "fig_time_to_target",
 ]

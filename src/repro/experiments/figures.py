@@ -32,7 +32,9 @@ from .svg import Series, bar_chart, line_chart
 
 __all__ = ["POLICY_COLORS", "POLICY_NAMES", "AGG_COLORS", "Facet", "facets",
            "render_gallery", "fig_convergence", "fig_utilization",
-           "fig_latency_cdf", "fig_time_to_target"]
+           "fig_latency_cdf", "fig_time_to_target",
+           "fig_service_latency_cdf", "fig_service_steady_state",
+           "fig_service_occupancy", "render_service_gallery"]
 
 # Fixed entity -> categorical-slot assignment (light-mode steps).
 POLICY_COLORS = {
@@ -234,6 +236,68 @@ def fig_time_to_target(record: dict, out_dir: Path,
         title=f"Simulated time to target loss — {ds}, sync vs async",
         ylabel="time to target (s, eq. 9 cumulative)",
         value_fmt=lambda v: f"{v:.1f}")
+
+
+_SERVICE_COLOR = AGG_COLORS["async"]   # the service IS the async engine
+_BUDGET_COLOR = "#8a8f98"              # neutral context line, never a series
+
+
+def fig_service_latency_cdf(record: dict, out_dir: Path) -> Path:
+    """Empirical CDF of per-event wall commit latency from a
+    ``service.json`` record, with the SLO budget as a vertical context
+    line — the attained fraction is where the CDF crosses it."""
+    lat = np.sort(np.asarray(record["events"]["latency_s"], float))
+    cdf = np.arange(1, lat.size + 1) / lat.size
+    budget = float(record["summary"]["slo"]["budget_s"])
+    series = [Series("commit latency", lat, cdf, _SERVICE_COLOR, step=True)]
+    if lat.min() <= budget <= lat.max() * 1.5:
+        series.append(Series(f"SLO budget ({budget:g}s)",
+                             np.array([budget, budget]),
+                             np.array([0.0, 1.0]), _BUDGET_COLOR))
+    return line_chart(
+        series, Path(out_dir) / "service_latency_cdf.svg",
+        title="Sustained service — commit latency CDF",
+        xlabel="per-event commit latency (s, wall)",
+        ylabel="P(latency ≤ x)", ylim=(0.0, 1.04))
+
+
+def fig_service_steady_state(record: dict, out_dir: Path) -> Path:
+    """Steady-state global loss vs events served under continuous churn."""
+    ss = record["steady_state"]
+    x = np.asarray(ss["event"], float)
+    return line_chart(
+        [Series("global loss", x, np.asarray(ss["global_loss"], float),
+                _SERVICE_COLOR)],
+        Path(out_dir) / "service_steady_state.svg",
+        title="Sustained service — steady-state loss",
+        xlabel="events served (cumulative, incl. warm-up)",
+        ylabel="global loss F(w)")
+
+
+def fig_service_occupancy(record: dict, out_dir: Path) -> Path:
+    """Server buffer occupancy and mean device AoU per measured event."""
+    ev = record["events"]
+    x = np.asarray(ev["event"], float)
+    series = [Series("buffer occupancy", x,
+                     np.asarray(ev["n_pending"], float),
+                     _SERVICE_COLOR, step=True)]
+    if "mean_age" in ev:
+        series.append(Series("mean AoU (rounds)", x,
+                             np.asarray(ev["mean_age"], float),
+                             AGG_COLORS["async_const"]))
+    return line_chart(
+        series, Path(out_dir) / "service_occupancy.svg",
+        title="Sustained service — buffer occupancy / AoU",
+        xlabel="events served (cumulative, incl. warm-up)",
+        ylabel="pending updates / mean AoU")
+
+
+def render_service_gallery(record: dict, out_dir: str | Path) -> list[Path]:
+    """All figures for one sustained-service record; returns written paths."""
+    out_dir = Path(out_dir)
+    return [fig_service_latency_cdf(record, out_dir),
+            fig_service_steady_state(record, out_dir),
+            fig_service_occupancy(record, out_dir)]
 
 
 def render_gallery(record: dict, out_dir: str | Path) -> list[Path]:

@@ -18,6 +18,7 @@ __all__ = [
     "rounds_to_target",
     "time_to_target_s",
     "per_round_utilization",
+    "eval_spacing_weights",
     "mean_subchannel_utilization",
     "cumulative_latency_s",
     "summarize_cell",
@@ -42,17 +43,51 @@ def time_to_target_s(hist: SimHistory, target_loss: float) -> float | None:
     return float(hist.cum_time_s[hit[0]]) if hit.size else None
 
 
-def per_round_utilization(hist: SimHistory, k: int) -> np.ndarray:
-    """Fraction of the K sub-channels carrying a transmitter, per round
-    (eval-sampled fallback when a history carries no full tx trace)."""
+def per_round_utilization(hist: SimHistory, k: int, *,
+                          allow_eval_sampled: bool = False) -> np.ndarray:
+    """Fraction of the K sub-channels carrying a transmitter, per round.
+
+    With a full ``tx_trace`` this is exact, one entry per round.  Without
+    one, only the eval-sampled ``n_transmitted`` exists; that array has
+    one entry per EVAL round, so it is not "per round" and its plain mean
+    is biased whenever ``eval_every > 1`` (the final round and round 0
+    are always sampled, interior blocks are represented by one round
+    each).  Callers must opt in to that coarser series explicitly with
+    ``allow_eval_sampled=True`` and weight it themselves (see
+    `eval_spacing_weights`); otherwise the silent sampling-grid switch
+    raises.
+    """
     if hist.tx_trace is not None:
         return hist.tx_trace.sum(axis=1) / k
+    if not allow_eval_sampled:
+        raise ValueError(
+            "history has no full tx_trace: n_transmitted is sampled on the "
+            "eval grid, not per round. Pass allow_eval_sampled=True to "
+            "accept the eval-sampled series (weight it by "
+            "eval_spacing_weights(hist.rounds) before averaging).")
     return hist.n_transmitted / k
 
 
+def eval_spacing_weights(rounds: np.ndarray) -> np.ndarray:
+    """Per-eval-point block sizes: eval point j stands in for the rounds
+    since the previous eval point, so weights sum to the horizon length."""
+    r = np.asarray(rounds, np.int64)
+    return np.diff(np.concatenate(([-1], r))).astype(np.float64)
+
+
 def mean_subchannel_utilization(hist: SimHistory, k: int) -> float:
-    """Mean fraction of the K sub-channels carrying a transmitter per round."""
-    return float(per_round_utilization(hist, k).mean())
+    """Mean fraction of the K sub-channels carrying a transmitter per round.
+
+    Exact when the history carries a full ``tx_trace``.  On the
+    eval-sampled fallback, each sample is weighted by the number of
+    rounds its eval block spans (`eval_spacing_weights`), so uneven eval
+    grids (round 0 and the final round are always sampled) don't skew
+    the average the way a plain mean over eval points does.
+    """
+    if hist.tx_trace is not None:
+        return float(per_round_utilization(hist, k).mean())
+    u = per_round_utilization(hist, k, allow_eval_sampled=True)
+    return float(np.average(u, weights=eval_spacing_weights(hist.rounds)))
 
 
 def cumulative_latency_s(hist: SimHistory) -> float:

@@ -43,13 +43,29 @@ def _versions(sweep_dir: Path) -> list[tuple[int, Path]]:
 
 
 def next_version_dir(root: str | Path, name: str) -> Path:
-    """Create and return the next ``results/<name>/v####`` directory."""
+    """Create and return the next ``results/<name>/v####`` directory.
+
+    Concurrency-safe: ``mkdir`` (never the directory listing) is the
+    atomic claim.  Two writers that list the same versions compute the
+    same candidate, but only one ``mkdir`` can succeed — the loser sees
+    FileExistsError, re-lists, and claims the next free slot instead of
+    crashing (CI matrix jobs, sharded sweeps, and the long-running
+    service harness all race this path).
+    """
     sweep_dir = Path(root) / name
-    versions = _versions(sweep_dir)
-    nxt = versions[-1][0] + 1 if versions else 1
-    out = sweep_dir / f"v{nxt:04d}"
-    out.mkdir(parents=True)
-    return out
+    last_err: OSError | None = None
+    for _ in range(1000):     # bounded: each retry means someone claimed
+        versions = _versions(sweep_dir)
+        nxt = versions[-1][0] + 1 if versions else 1
+        out = sweep_dir / f"v{nxt:04d}"
+        try:
+            out.mkdir(parents=True, exist_ok=False)
+            return out
+        except FileExistsError as err:
+            last_err = err
+    raise RuntimeError(
+        f"could not claim a version directory under {sweep_dir} after "
+        f"1000 attempts") from last_err
 
 
 def latest_dir(root: str | Path, name: str) -> Path | None:
@@ -58,22 +74,25 @@ def latest_dir(root: str | Path, name: str) -> Path | None:
     return versions[-1][1] if versions else None
 
 
-def write_record(record: dict, out_dir: str | Path) -> Path:
-    """Write ``sweep.json`` (schema-stamped) into a version directory."""
+def write_record(record: dict, out_dir: str | Path,
+                 filename: str = "sweep.json") -> Path:
+    """Write a schema-stamped JSON record into a version directory
+    (``sweep.json`` for sweeps; the service harness writes
+    ``service.json``)."""
     record = dict(record)
     record.setdefault("schema", SCHEMA_VERSION)
-    path = Path(out_dir) / "sweep.json"
+    path = Path(out_dir) / filename
     with open(path, "w") as fh:
         json.dump(record, fh, indent=1, sort_keys=False)
         fh.write("\n")
     return path
 
 
-def load_record(path: str | Path) -> dict:
-    """Load a record from a ``sweep.json`` path or its version directory."""
+def load_record(path: str | Path, filename: str = "sweep.json") -> dict:
+    """Load a record from a JSON path or its version directory."""
     p = Path(path)
     if p.is_dir():
-        p = p / "sweep.json"
+        p = p / filename
     with open(p) as fh:
         record = json.load(fh)
     if record.get("schema") != SCHEMA_VERSION:
@@ -83,7 +102,8 @@ def load_record(path: str | Path) -> dict:
     return record
 
 
-def load_latest(root: str | Path, name: str) -> dict | None:
+def load_latest(root: str | Path, name: str,
+                filename: str = "sweep.json") -> dict | None:
     """Load the most recent record of a sweep, or None if never run."""
     d = latest_dir(root, name)
-    return load_record(d) if d else None
+    return load_record(d, filename) if d else None

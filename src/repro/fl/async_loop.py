@@ -43,6 +43,19 @@ event buffer:
                                       flight (at most ONE per device, so the
                                       buffer structurally cannot overflow).
 
+Segment resume (DESIGN.md §14): the carry above is the event loop's
+COMPLETE state — params, PRNG key, ages, the in-flight buffer pair, and
+the virtual clocks.  `build_async_runner(..., segmented=True)` therefore
+returns a ``run(data, carry) -> (carry, ys)`` closure instead of building
+and discarding the carry internally: the sustained service chains the
+carry across fixed-size segments (one compiled program per segment
+shape), offsetting the event index by the traced scalar ``data["t0"]`` so
+absolute staleness, AoU cluster rotation, and the dispatch bookkeeping
+continue seamlessly — S segments of length L replay the single scan of
+length S*L bit-for-bit (`disp_e` holds absolute indices; `rem` stays
+RELATIVE, so chaining adds no float round-trips).  `init_async_carry`
+builds the t=0 carry both modes share.
+
 Degenerate limit: with `buffer="full"` every in-flight upload commits at
 its own event, so commit == dispatch, staleness == 0 (weight multiplier
 exactly 1.0), the server_lr=1 mixing is an exact endpoint select, the
@@ -70,7 +83,22 @@ from .engine_common import (
 )
 from .server import aggregate_buffered, staleness_weight
 
-__all__ = ["commit_event", "build_async_runner"]
+__all__ = ["commit_event", "init_async_carry", "build_async_runner"]
+
+
+def init_async_carry(params0, key0, n: int):
+    """The event loop's t=0 carry: fresh model, unit ages, empty buffer.
+
+    The buffer pair (`buf`, `base`) is zero-initialized — rows are only
+    ever read after a dispatch wrote them (`active` gates every commit),
+    so the fill value is unobservable; zeros keep the carry deterministic
+    for the segment-resume contract.
+    """
+    buf0 = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((n + 1,) + l.shape, l.dtype), params0)
+    return (params0, key0, jnp.ones(n, jnp.int32), buf0, buf0,
+            jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.float32),
+            jnp.zeros(n, bool))
 
 
 def commit_event(rem: jax.Array, active: jax.Array, buffer: jax.Array,
@@ -107,19 +135,27 @@ def commit_event(rem: jax.Array, active: jax.Array, buffer: jax.Array,
 def build_async_runner(model, trainer, policies: Sequence[tuple[str, str]],
                        *, k: int, n: int, rounds: int,
                        eval_mask: np.ndarray, track_gradnorm: bool = False,
-                       max_rounds: int = 200):
+                       max_rounds: int = 200, segmented: bool = False):
     """One fused `lax.scan` over server events: leader + training + commits.
 
     Mirrors `fl.sim._build_scan_runner` (same `data` dict contract plus
     the async operands `buffer` and `stale_exp`), returning the raw
     traceable fn(data) -> ys for the caller to `jit` / `jit(vmap(...))`.
+
+    With ``segmented=True`` the returned closure is instead
+    ``fn(data, carry) -> (carry, ys)``: the caller owns the carry (seed
+    it with `init_async_carry`, thread it across segments) and `data`
+    additionally provides the traced int32 scalar ``t0`` — the absolute
+    event index of the segment's first event, added to the per-event
+    round counter so staleness, AoU rotation, and `disp_e` bookkeeping
+    stay absolute across segment boundaries (DESIGN.md §14).
     """
     n_clusters = int(math.ceil(n / k))
     ndev = jnp.arange(n)
     kslot = jnp.arange(k)
     f0 = jnp.float32(0.0)
 
-    def run(data):
+    def scan_events(data, carry0):
         branches = make_leader_branches(policies, data, k=k, n=n,
                                         n_clusters=n_clusters,
                                         max_rounds=max_rounds)
@@ -205,12 +241,17 @@ def build_async_runner(model, trainer, policies: Sequence[tuple[str, str]],
             return (params, key, age_next, buf, base, disp_e, rem,
                     active), ys
 
-        buf0 = jax.tree_util.tree_map(
-            lambda l: jnp.zeros((n + 1,) + l.shape, l.dtype), data["params0"])
-        carry0 = (data["params0"], data["key0"], jnp.ones(n, jnp.int32),
-                  buf0, buf0, jnp.zeros(n, jnp.int32),
-                  jnp.zeros(n, jnp.float32), jnp.zeros(n, bool))
-        _, ys = jax.lax.scan(body, carry0, make_xs(data, rounds, eval_mask))
+        xs = make_xs(data, rounds, eval_mask)
+        if segmented:
+            xs["t"] = data["t0"] + xs["t"]
+        return jax.lax.scan(body, carry0, xs)
+
+    if segmented:
+        return scan_events
+
+    def run(data):
+        carry0 = init_async_carry(data["params0"], data["key0"], n)
+        _, ys = scan_events(data, carry0)
         return ys
 
     return run

@@ -224,6 +224,24 @@ def _pad_partition(ds: Dataset, part: FLPartition, bmax: int | None = None):
     return jnp.asarray(x), jnp.asarray(y), jnp.asarray(m)
 
 
+def _sample_dataset(cfg: SimConfig, rng: np.random.Generator):
+    """The world stream's dataset phase: dataset draw, device partition,
+    padded client buffers.  This is the rng PREFIX of `_prepare` — it
+    never consults the scenario — and it is reused verbatim by the
+    sustained service (`repro.service`), whose open-ended world replays
+    the same phase before handing the stream to `ScenarioStream`."""
+    ds_kw = {} if cfg.n_samples is None else {"n": cfg.n_samples}
+    ds = make_dataset(cfg.dataset, rng, **ds_kw)
+    if cfg.partition == "dirichlet":
+        part = partition_dirichlet(rng, ds.y, cfg.n_devices,
+                                   cfg.dirichlet_alpha)
+    else:
+        part = partition_imbalanced_iid(rng, ds.n, cfg.n_devices)
+    beta = part.beta.astype(np.float64)
+    x_all, y_all, m_all = _pad_partition(ds, part)
+    return ds, part, beta, x_all, y_all, m_all
+
+
 @dataclasses.dataclass
 class _Prepared:
     """Everything sampled ahead of the training loop for one simulation."""
@@ -276,15 +294,7 @@ def _prepare(cfg: SimConfig, _data_cache: dict | None = None) -> _Prepared:
         ds, part, beta, x_all, y_all, m_all, state = _data_cache[data_key]
         rng.bit_generator.state = state
     else:
-        ds_kw = {} if cfg.n_samples is None else {"n": cfg.n_samples}
-        ds = make_dataset(cfg.dataset, rng, **ds_kw)
-        if cfg.partition == "dirichlet":
-            part = partition_dirichlet(rng, ds.y, cfg.n_devices,
-                                       cfg.dirichlet_alpha)
-        else:
-            part = partition_imbalanced_iid(rng, ds.n, cfg.n_devices)
-        beta = part.beta.astype(np.float64)
-        x_all, y_all, m_all = _pad_partition(ds, part)
+        ds, part, beta, x_all, y_all, m_all = _sample_dataset(cfg, rng)
         if _data_cache is not None:
             _data_cache[data_key] = (ds, part, beta, x_all, y_all, m_all,
                                      rng.bit_generator.state)

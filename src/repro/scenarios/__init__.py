@@ -14,7 +14,11 @@ Public surface:
   scenario  -- the `Scenario` bundle, the named-preset registry
                (``static`` reproduces the legacy behavior bit-exactly),
                `generate_traces`, and `apply_dynamics` (folds churn into
-               a solved whole-horizon `RAResult`).
+               a solved whole-horizon `RAResult`);
+  stream    -- `ScenarioStream`, the open-ended per-round extension of
+               the same processes: segment s of ONE long seed-
+               deterministic trace, for the sustained service
+               (DESIGN.md §14).
 
 `fl.SimConfig(scenario=...)` and the `SweepSpec(scenarios=...)` axis are
 the consumer entry points; see examples/reproduce_figures.py --scenario.
@@ -40,6 +44,7 @@ from .scenario import (
     register_scenario,
     scenario_name,
 )
+from .stream import ScenarioStream
 
 __all__ = [
     # process configs + generators
@@ -50,4 +55,6 @@ __all__ = [
     "Scenario", "ScenarioTraces", "PRESETS", "get_scenario",
     "register_scenario", "scenario_name", "generate_traces",
     "apply_dynamics",
+    # open-ended stream extension
+    "ScenarioStream",
 ]

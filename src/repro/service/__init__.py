@@ -1,0 +1,36 @@
+"""Sustained-service harness: the async event engine as a long-running
+streaming service (DESIGN.md §14).
+
+Public surface:
+  ServiceConfig / SustainedService
+      -- the resumable segment engine + load generator: regenerates
+         Γ/scenario traces in fixed-size segments of ONE open-ended
+         seed-deterministic stream (`scenarios.ScenarioStream`) and
+         chains the async scan's carry across segments — one compiled
+         program per segment shape;
+  observability
+      -- pure per-event accounting: throughput, p50/p95/p99 commit
+         latency, SLO attainment, buffer occupancy (`EventLog`,
+         `summarize`).
+
+CLI: ``PYTHONPATH=src python -m repro.service.run --smoke`` writes a
+versioned ``results/<name>/v####/service.json`` artifact + figures.
+"""
+from .harness import ServiceConfig, SustainedService
+from .observability import (
+    EventLog,
+    latency_percentiles,
+    slo_attainment,
+    summarize,
+    throughput_events_per_s,
+)
+
+__all__ = [
+    "ServiceConfig",
+    "SustainedService",
+    "EventLog",
+    "latency_percentiles",
+    "slo_attainment",
+    "throughput_events_per_s",
+    "summarize",
+]

@@ -30,6 +30,7 @@ FLAG_SOURCES = {
     "reproduce_figures.py": ROOT / "examples" / "reproduce_figures.py",
     "benchmarks.run": ROOT / "benchmarks" / "run.py",
     "multi_cell.py": ROOT / "examples" / "multi_cell.py",
+    "repro.service.run": ROOT / "src" / "repro" / "service" / "run.py",
 }
 # Flags consumed by tools, not by our entry points.
 _GENERIC_FLAGS = {"--upgrade"}

@@ -1,0 +1,216 @@
+"""Sustained-service harness (DESIGN.md §14): segment-resume contract,
+stream extension, SLO/percentile arithmetic, and the artifact-store
+concurrency fix.
+
+The load generator's wall-clock numbers are machine-dependent and never
+asserted here — only the deterministic invariants are: S segments of
+length L must be bit-identical to one segment of length S*L, a scenario
+stream must never reposition its rng when the segmentation changes, and
+the observability layer must be exact arithmetic over a hand-built log.
+"""
+import concurrent.futures as cf
+import json
+
+import numpy as np
+import pytest
+
+from repro.experiments.store import (
+    load_latest,
+    load_record,
+    next_version_dir,
+    write_record,
+)
+from repro.fl.sim import SimConfig
+from repro.scenarios import ScenarioStream, generate_traces
+from repro.service import (
+    EventLog,
+    ServiceConfig,
+    SustainedService,
+    latency_percentiles,
+    slo_attainment,
+    summarize,
+    throughput_events_per_s,
+)
+
+_SIM = dict(dataset="mnist", n_devices=8, n_subchannels=3, n_samples=96,
+            batch=16, local_steps=1, scenario="churn", aggregation="async")
+
+_YS_KEYS = ("loss", "acc", "latency", "energy", "selected", "transmitted",
+            "age", "committed", "n_pending", "overflow", "rem_dispatch")
+
+
+def _service(segment_events, eval_every):
+    return SustainedService(ServiceConfig(
+        sim=SimConfig(**_SIM),
+        segment_events=segment_events,
+        eval_every_events=eval_every))
+
+
+# ---------------------------------------------------------------------------
+# stream extension: segment s continues ONE world, never a reseeded one
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", ["static", "urban", "harvest"])
+def test_scenario_stream_segmentation_invariant(preset):
+    wcfg = SimConfig(**_SIM).wireless()
+    one = ScenarioStream(7, wcfg, preset).next_segment(12)
+    chained = ScenarioStream(7, wcfg, preset)
+    parts = [chained.next_segment(r) for r in (3, 4, 5)]
+    for field in ("h2_all", "distances_m", "avail", "slowdown", "e_max_j"):
+        whole = getattr(one, field)
+        cat = np.concatenate([getattr(p, field) for p in parts])
+        assert np.array_equal(whole, cat), (preset, field)
+    assert chained.t == 12
+
+
+def test_scenario_stream_differs_from_block_order_world():
+    """The stream is a different (equally valid) world than the
+    fixed-horizon block sampler — drawing per round, not per process
+    block, is what makes its rng position segment-size independent."""
+    wcfg = SimConfig(**_SIM).wireless()
+    st = ScenarioStream(7, wcfg, "urban").next_segment(12)
+    block = generate_traces(7, wcfg, "urban", 12)
+    assert st.h2_all.shape == block.h2_all.shape
+    assert not np.array_equal(st.h2_all, block.h2_all)
+
+
+# ---------------------------------------------------------------------------
+# segment-resume contract: S x L  ==  1 x S*L, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_segment_chained_bit_identical_to_single_scan():
+    one = _service(segment_events=12, eval_every=2)
+    ys_one = one.run_segment()
+    chained = _service(segment_events=4, eval_every=2)
+    parts = [chained.run_segment() for _ in range(3)]
+    assert chained.events_served == one.events_served == 12
+    for k in _YS_KEYS:
+        whole = ys_one[k]
+        cat = np.concatenate([p[k] for p in parts])
+        assert np.array_equal(whole, cat), k
+
+
+def test_service_record_shape():
+    svc = SustainedService(ServiceConfig(
+        sim=SimConfig(**_SIM), segment_events=4, eval_every_events=2,
+        warmup_segments=1, latency_budget_s=60.0))
+    rec = svc.serve(2)
+    assert rec["kind"] == "sustained_service"
+    assert rec["service"]["events_measured"] == 8
+    assert rec["service"]["events_served_total"] == 12   # incl. warm-up
+    ev = rec["events"]
+    assert len({len(v) for v in ev.values()}) == 1
+    assert len(ev["event"]) == 8
+    assert ev["event"][0] == 4                           # after warm-up
+    s = rec["summary"]
+    assert {"p50", "p95", "p99", "mean", "max"} <= s["latency_s"].keys()
+    assert s["events"] == 8 and s["throughput_events_per_s"] > 0
+    assert 0.0 <= s["slo"]["attained"] <= 1.0
+    ss = rec["steady_state"]
+    assert ss["event"] == [5, 7, 9, 11]                  # eval block ends
+    assert len(ss["global_loss"]) == len(ss["accuracy"]) == 4
+    json.dumps(rec)                                      # artifact-ready
+
+
+def test_service_config_validation():
+    with pytest.raises(ValueError, match="divide"):
+        ServiceConfig(sim=SimConfig(**_SIM), segment_events=10,
+                      eval_every_events=3)
+    with pytest.raises(ValueError, match="positive"):
+        ServiceConfig(sim=SimConfig(**_SIM), target_rate_events_per_s=0.0)
+    with pytest.raises(ValueError, match="budget"):
+        ServiceConfig(sim=SimConfig(**_SIM), latency_budget_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# observability: exact arithmetic on hand-built traces
+# ---------------------------------------------------------------------------
+
+def _log():
+    # 4 events: latencies 1, 2, 3, 4 seconds exactly.
+    return EventLog(arrival_s=np.array([0.0, 1.0, 2.0, 3.0]),
+                    complete_s=np.array([1.0, 3.0, 5.0, 7.0]),
+                    sim_latency_s=np.array([0.5, 0.5, 1.0, 1.0]),
+                    n_pending=np.array([1, 2, 3, 2]))
+
+
+def test_latency_percentile_and_slo_arithmetic():
+    log = _log()
+    lat = log.latencies_s()
+    assert np.array_equal(lat, [1.0, 2.0, 3.0, 4.0])
+    p = latency_percentiles(lat)
+    assert p["p50"] == pytest.approx(2.5)
+    assert p["p95"] == pytest.approx(np.percentile([1, 2, 3, 4], 95))
+    assert slo_attainment(lat, 2.0) == pytest.approx(0.5)
+    assert slo_attainment(lat, 0.5) == 0.0
+    assert slo_attainment(lat, 10.0) == 1.0
+    # window = first arrival (0) to last completion (7)
+    assert throughput_events_per_s(log) == pytest.approx(4 / 7)
+    s = summarize(log, budget_s=2.0)
+    assert s["events"] == 4
+    assert s["latency_s"]["mean"] == pytest.approx(2.5)
+    assert s["slo"]["attained"] == pytest.approx(0.5)
+    assert s["buffer"]["mean_pending"] == pytest.approx(2.0)
+    assert s["sim"]["total_time_s"] == pytest.approx(3.0)
+
+
+def test_event_log_validation():
+    with pytest.raises(ValueError, match="equal-length"):
+        EventLog(arrival_s=np.zeros(3), complete_s=np.zeros(2),
+                 sim_latency_s=np.zeros(3), n_pending=np.zeros(3))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        EventLog(arrival_s=np.array([1.0, 0.0]),
+                 complete_s=np.array([2.0, 2.0]),
+                 sim_latency_s=np.zeros(2), n_pending=np.zeros(2))
+    with pytest.raises(ValueError, match="complete before"):
+        EventLog(arrival_s=np.array([0.0, 2.0]),
+                 complete_s=np.array([1.0, 1.0]),
+                 sim_latency_s=np.zeros(2), n_pending=np.zeros(2))
+    with pytest.raises(ValueError, match="positive"):
+        slo_attainment(np.ones(3), 0.0)
+    with pytest.raises(ValueError, match="non-empty"):
+        latency_percentiles(np.array([]))
+
+
+# ---------------------------------------------------------------------------
+# artifact store: concurrent version claims (the FileExistsError fix)
+# ---------------------------------------------------------------------------
+
+def test_next_version_dir_stale_listing_retries(tmp_path, monkeypatch):
+    """A writer that lists versions just before another claims one must
+    retry onto the next free slot, not crash (the pre-fix behavior)."""
+    from repro.experiments import store
+
+    (tmp_path / "s" / "v0001").mkdir(parents=True)
+    real = store._versions
+    stale = {"pending": True}
+
+    def racy_versions(sweep_dir):
+        if stale.pop("pending", None):
+            return []          # raced: another writer claimed v0001 already
+        return real(sweep_dir)
+
+    monkeypatch.setattr(store, "_versions", racy_versions)
+    out = next_version_dir(tmp_path, "s")
+    assert out.name == "v0002"
+
+
+def test_next_version_dir_concurrent_claims_unique(tmp_path):
+    def claim(_):
+        return next_version_dir(tmp_path, "s").name
+
+    with cf.ThreadPoolExecutor(max_workers=8) as pool:
+        names = list(pool.map(claim, range(24)))
+    assert len(set(names)) == 24
+    assert sorted(names) == [f"v{i:04d}" for i in range(1, 25)]
+
+
+def test_store_filename_roundtrip(tmp_path):
+    d = next_version_dir(tmp_path, "svc")
+    write_record({"kind": "sustained_service"}, d, filename="service.json")
+    assert (d / "service.json").exists() and not (d / "sweep.json").exists()
+    rec = load_record(d, filename="service.json")
+    assert rec["kind"] == "sustained_service"
+    assert load_latest(tmp_path, "svc",
+                       filename="service.json")["kind"] == "sustained_service"

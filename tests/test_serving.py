@@ -87,3 +87,83 @@ def test_cold_cache_decode_runs_all_archs():
         logits, cache2 = decode_step(cfg, params, db, cache)
         assert logits.shape == (b, 1, cfg.vocab)
         assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+
+# --------------------------------------------------------------------------
+# serve_loop driver: warm-up step + single device->host pull
+# --------------------------------------------------------------------------
+
+def test_serve_loop_warmup_and_single_host_pull(monkeypatch, capsys):
+    """The decode loop must (a) run one DISCARDED warm-up serve step so
+    tok/s excludes the first-step compile, (b) keep tokens on device and
+    pull the generation to host exactly once — the old per-step
+    `np.asarray(tok)` forced a device sync every iteration."""
+    from repro.launch import serve as serve_mod
+
+    calls = {"serve": 0}
+    real_steps = serve_mod._jitted_steps
+
+    def counting_steps(cfg, headroom, ctx):
+        prefill, serve = real_steps(cfg, headroom, ctx)
+
+        def counting_serve(params, db, cache):
+            calls["serve"] += 1
+            return serve(params, db, cache)
+
+        return prefill, counting_serve
+
+    class CountingNp:
+        asarray_calls = 0
+
+        def asarray(self, *a, **k):
+            CountingNp.asarray_calls += 1
+            return np.asarray(*a, **k)
+
+        def __getattr__(self, name):
+            return getattr(np, name)
+
+    monkeypatch.setattr(serve_mod, "_jitted_steps", counting_steps)
+    monkeypatch.setattr(serve_mod, "np", CountingNp())
+
+    batch, new_tokens = 2, 5
+    out = serve_mod.serve_loop("qwen2-7b-smoke", batch=batch, prompt_len=8,
+                               new_tokens=new_tokens, seed=0)
+    assert out.shape == (batch, new_tokens + 1)   # prefill token + decoded
+    assert out.dtype == np.int32
+    # exactly one extra (warm-up) serve call beyond the measured steps
+    assert calls["serve"] == new_tokens + 1
+    # ONE host pull for the whole generation, none inside the loop
+    assert CountingNp.asarray_calls == 1
+    # and the throughput line no longer blames first-step compile
+    logged = capsys.readouterr().out
+    assert "steady-state decode" in logged
+    assert "incl. first-step compile" not in logged
+
+
+def test_serve_loop_warmup_does_not_perturb_generation(monkeypatch):
+    """Greedy decode is deterministic: the discarded warm-up step (serve
+    outputs are not donated) must leave the generated tokens identical to
+    a loop that never warmed up."""
+    from repro.launch import serve as serve_mod
+
+    out = serve_mod.serve_loop("qwen2-7b-smoke", batch=2, prompt_len=8,
+                               new_tokens=4, seed=3)
+
+    real_steps = serve_mod._jitted_steps
+
+    def skip_warmup_steps(cfg, headroom, ctx):
+        prefill, serve = real_steps(cfg, headroom, ctx)
+        state = {"first": True}
+
+        def serve_no_warm(params, db, cache):
+            if state.pop("first", None):
+                # return inputs untouched: the warm-up becomes a no-op
+                return db["token"], None, cache
+            return serve(params, db, cache)
+
+        return prefill, serve_no_warm
+
+    monkeypatch.setattr(serve_mod, "_jitted_steps", skip_warmup_steps)
+    again = serve_mod.serve_loop("qwen2-7b-smoke", batch=2, prompt_len=8,
+                                 new_tokens=4, seed=3)
+    assert np.array_equal(out, again)

@@ -346,6 +346,32 @@ def test_derived_metrics():
     assert mean_subchannel_utilization(h, 4) == pytest.approx(0.5)
 
 
+def test_utilization_fallback_is_explicit_and_weighted():
+    """Without a full tx_trace, utilization is eval-sampled: the silent
+    per-round pretence raises, and the mean weights each eval point by
+    its block span instead of double-counting the always-sampled tail."""
+    from repro.experiments import eval_spacing_weights, per_round_utilization
+
+    # eval_every=5, horizon 20: eval rounds 0, 5, 10, 15, 19.
+    rounds = [0, 5, 10, 15, 19]
+    h = _fake_history(losses=[3.0] * 5, rounds=rounds, lat=[1.0] * 20)
+    h = dataclasses.replace(h, tx_trace=None,
+                            n_transmitted=np.array([0, 4, 4, 4, 4], float))
+    with pytest.raises(ValueError, match="allow_eval_sampled"):
+        per_round_utilization(h, 4)
+    u = per_round_utilization(h, 4, allow_eval_sampled=True)
+    assert np.array_equal(u, [0.0, 1.0, 1.0, 1.0, 1.0])
+    w = eval_spacing_weights(h.rounds)
+    assert np.array_equal(w, [1, 5, 5, 5, 4])     # blocks cover all 20 rounds
+    assert w.sum() == 20
+    # plain mean over eval points would be 0.8; round-0 carries a 1-round
+    # block, so the block-weighted mean is 19/20.
+    assert mean_subchannel_utilization(h, 4) == pytest.approx(19 / 20)
+    # full-trace histories are untouched by the fallback change
+    full = _fake_history(losses=[3.0] * 5, rounds=rounds, lat=[1.0] * 20)
+    assert mean_subchannel_utilization(full, 2) == pytest.approx(1.0)
+
+
 def test_store_versioning(tmp_path):
     d1 = next_version_dir(tmp_path, "s")
     d2 = next_version_dir(tmp_path, "s")
