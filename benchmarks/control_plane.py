@@ -39,6 +39,15 @@ the perf trajectory is machine-readable across PRs.  Acceptance rows:
     (N=64, K=16, churn scenario).  Gate: sustained throughput
     >= 55 events/s; p50/p99 commit latency and SLO attainment against a
     2 s budget are recorded alongside.
+  * `hier_async` — the two-tier buffered async hierarchy (DESIGN.md §15)
+    vs the sync hierarchy scan at city scale (8 cells x 32 devices = 256
+    devices, churn scenario).  Gates: wall throughput >= 0.45x the sync
+    hier scan's (the async event carries both tiers' buffer state; the
+    measured ratio is ~0.63x — see the calibration note at HIER_CFG),
+    simulated p99 commit latency <= 0.5x the sync hierarchy's p99 round
+    latency (the async engine's actual win: no tier waits for its
+    slowest member), and the full-buffer degenerate-limit anchor at
+    bench scale.
   * `polyblock_fused` — the staged fused Γ driver (`solve_pairs_fused`,
     mixed-precision projections) vs the step driver (`solve_pairs_jit`,
     the previous whole-horizon path) at N in {512, 4096, 32768} devices
@@ -68,7 +77,13 @@ from repro.core import (
     solve_pairs_fused,
     solve_pairs_jit,
 )
-from repro.fl import SimConfig, run_many, run_simulation
+from repro.fl import (
+    HierSimConfig,
+    SimConfig,
+    run_hier_many,
+    run_many,
+    run_simulation,
+)
 from repro.launch.analytic import polyblock_solve_cost, roofline_pct
 from repro.scenarios import apply_dynamics, generate_traces
 from repro.service import ServiceConfig, SustainedService
@@ -107,6 +122,24 @@ SERVICE_SEGMENT_EVENTS = 100
 SERVICE_EVAL_EVERY = 20
 SERVICE_BUDGET_S = 2.0
 SERVICE_TARGET_EV_PER_S = 55.0
+
+HIER_CELLS = 8
+HIER_REPS = 2
+HIER_CFG = dict(dataset="mnist", n_cells=HIER_CELLS, devices_per_cell=32,
+                subchannels_per_cell=8, rounds=50, n_samples=128, batch=16,
+                eval_every=10, local_steps=1, scenario="churn")
+# Honest calibration (DESIGN.md §15): a two-tier async event carries BOTH
+# tiers' buffer state in its scan carry, so its wall throughput sits below
+# the sync hierarchy scan's (0.63x measured at N=256 / 8 cells on this
+# class of host — the same per-event overhead the flat async_event_loop
+# row records).  The async win is SIMULATED time — no tier ever waits for
+# its slowest member — pinned by the results/hier_async artifact and by
+# the deterministic p99 gate below.  Gates: wall-throughput ratio floor
+# with ~30% margin under the measured value, simulated p99 commit latency
+# at most half the sync hierarchy's p99 round latency (deterministic
+# given the config, measured 0.17x), and the full-buffer anchor.
+HIER_TARGET_THROUGHPUT_RATIO = 0.45
+HIER_TARGET_P99_RATIO = 0.5
 
 GRID_DS = ("alg3", "random", "fixed", "cluster")
 GRID_SEEDS = 2
@@ -317,6 +350,63 @@ def run(json_path: str | None = None):
         "mean_pending": summ["buffer"]["mean_pending"],
         "target_events_per_s": SERVICE_TARGET_EV_PER_S,
         "meets_target": bool(svc_ev_s >= SERVICE_TARGET_EV_PER_S),
+    }
+
+    # ---- acceptance: two-tier async hierarchy vs the sync hier scan -------
+    h_sync = HierSimConfig(policy=RoundPolicy(ra="fix"), **HIER_CFG)
+    h_async = HierSimConfig(policy=RoundPolicy(ra="fix"),
+                            aggregation="async", global_aggregation="async",
+                            **HIER_CFG)
+    h_times = {"scan": [], "async": []}
+    h_hists = {}
+    for _ in range(HIER_REPS):
+        for eng, hcfg in (("scan", h_sync), ("async", h_async)):
+            t0 = time.perf_counter()
+            h_hists[eng] = run_hier_many([hcfg], engine=eng)[0]
+            h_times[eng].append(time.perf_counter() - t0)
+    t_hs, t_ha = min(h_times["scan"]), min(h_times["async"])
+    hier_n = HIER_CELLS * HIER_CFG["devices_per_cell"]
+    hier_r_per_s = HIER_CFG["rounds"] / t_hs
+    hier_ev_per_s = HIER_CFG["rounds"] / t_ha
+    hier_ratio = hier_ev_per_s / hier_r_per_s
+    hier_p99_async = float(np.percentile(h_hists["async"].latency_all, 99))
+    hier_p99_sync = float(np.percentile(h_hists["scan"].latency_all, 99))
+    hier_p99_ratio = hier_p99_async / hier_p99_sync
+    # Degenerate-limit anchor at bench scale: full buffers at BOTH tiers
+    # reproduce the sync hierarchy's transmitted sets bit-exactly.
+    h_full = HierSimConfig(policy=RoundPolicy(ra="fix"),
+                           aggregation="async_full",
+                           global_aggregation="async_full", **HIER_CFG)
+    h_anchor = bool(np.array_equal(
+        run_hier_many([h_full], engine="async")[0].tx_trace,
+        h_hists["scan"].tx_trace))
+    hier_meets = bool(hier_ratio >= HIER_TARGET_THROUGHPUT_RATIO
+                      and hier_p99_ratio <= HIER_TARGET_P99_RATIO
+                      and h_anchor)
+    rows.append([f"hier_sync_scan/N{hier_n}x{HIER_CELLS}cells",
+                 round(t_hs * 1e6, 1),
+                 f"{hier_r_per_s:.1f} r/s, p99={hier_p99_sync:.2f}s sim"])
+    rows.append([f"hier_async/N{hier_n}x{HIER_CELLS}cells",
+                 round(t_ha * 1e6, 1),
+                 f"{hier_ev_per_s:.1f} ev/s ({hier_ratio:.2f}x sync), "
+                 f"p99={hier_p99_async:.2f}s sim, anchor={h_anchor}"])
+    record["hier_async"] = {
+        "n_cells": HIER_CELLS, "reps": HIER_REPS,
+        **{k: HIER_CFG[k] for k in ("rounds", "devices_per_cell",
+                                    "subchannels_per_cell", "n_samples",
+                                    "batch", "local_steps", "scenario")},
+        "n_devices_total": hier_n,
+        "sync_scan_s": t_hs, "async_s": t_ha,
+        "sync_scan_s_all": h_times["scan"], "async_s_all": h_times["async"],
+        "sync_rounds_per_s": hier_r_per_s, "events_per_s": hier_ev_per_s,
+        "throughput_ratio": hier_ratio,
+        "p99_commit_latency_s": hier_p99_async,
+        "p99_sync_round_latency_s": hier_p99_sync,
+        "p99_latency_ratio": hier_p99_ratio,
+        "full_buffer_anchor_tx_agree": h_anchor,
+        "target_throughput_ratio": HIER_TARGET_THROUGHPUT_RATIO,
+        "target_p99_ratio": HIER_TARGET_P99_RATIO,
+        "meets_target": hier_meets,
     }
 
     # ---- acceptance: 8-config policy x seed grid vs solo-call loop --------

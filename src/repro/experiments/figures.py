@@ -80,6 +80,8 @@ class Facet:
     sa: str
     scenario: str
     aggregation: str
+    n_cells: int
+    global_aggregation: str
     suffix: str    # filename suffix ("mnist", "mnist-urban-async", ...)
 
     def matches(self, cell: dict) -> bool:
@@ -89,36 +91,48 @@ class Facet:
                 and cell["policy"]["ra"] == self.ra
                 and cell["policy"]["sa"] == self.sa
                 and cell.get("scenario", "static") == self.scenario
-                and cell.get("aggregation", "sync") == self.aggregation)
+                and cell.get("aggregation", "sync") == self.aggregation
+                and cell.get("n_cells", 1) == self.n_cells
+                and cell.get("global_aggregation", "sync")
+                == self.global_aggregation)
 
 
 def facets(record: dict) -> list[Facet]:
-    """Distinct (dataset, N, K, ra, sa, scenario, aggregation) slices,
-    with minimal suffixes: shape/scheme/scenario/aggregation parts appear
-    only when the record actually varies them.  (Older artifacts carry no
-    "scenario"/"aggregation" keys; those cells facet as static/sync.)"""
+    """Distinct (dataset, N, K, ra, sa, scenario, aggregation, topology)
+    slices, with minimal suffixes: shape/scheme/scenario/aggregation/
+    cell-count parts appear only when the record actually varies them.
+    (Older artifacts carry no "scenario"/"aggregation"/"n_cells" keys;
+    those cells facet as static/sync/flat.)"""
     keys = sorted({(c["dataset"], c["n_devices"], c["n_subchannels"],
                     c["policy"]["ra"], c["policy"]["sa"],
                     c.get("scenario", "static"),
-                    c.get("aggregation", "sync"))
+                    c.get("aggregation", "sync"),
+                    c.get("n_cells", 1),
+                    c.get("global_aggregation", "sync"))
                    for c in record["cells"]})
     many_shapes = len({(d, n, k) for d, n, k, *_ in keys}) > len(
         {d for d, *_ in keys})
     many_schemes = len({(r, s) for _, _, _, r, s, *_ in keys}) > 1
-    many_scenarios = len({sc for *_, sc, _ in keys}) > 1
-    many_aggs = len({ag for *_, ag in keys}) > 1
+    many_scenarios = len({sc for *_, sc, _, _, _ in keys}) > 1
+    many_aggs = len({ag for *_, ag, _, _ in keys}) > 1
+    many_cells = len({nc for *_, nc, _ in keys}) > 1
+    many_gaggs = len({g for *_, g in keys}) > 1
     out = []
-    for d, n, k, r, s, sc, ag in keys:
+    for d, n, k, r, s, sc, ag, nc, g in keys:
         suffix = d
         if many_shapes:
             suffix += f"-N{n}-K{k}"
         if many_schemes:
             suffix += f"-{r}.{s}"
+        if many_cells:
+            suffix += f"-C{nc}"
         if many_scenarios:
             suffix += f"-{sc}"
         if many_aggs:
             suffix += f"-{ag}"
-        out.append(Facet(d, n, k, r, s, sc, ag, suffix))
+        if many_gaggs:
+            suffix += f"-g.{g}"
+        out.append(Facet(d, n, k, r, s, sc, ag, nc, g, suffix))
     return out
 
 
@@ -199,36 +213,45 @@ def fig_time_to_target(record: dict, out_dir: Path,
     ever averaged into a bar.
     """
     cells = record["cells"]
-    aggs = sorted({c.get("aggregation", "sync") for c in cells})
+    aggs = sorted({(c.get("aggregation", "sync"),
+                    c.get("global_aggregation", "sync")) for c in cells})
     if len(aggs) < 2:
         return None
     if ds is None:
         present = {c["policy"]["ds"] for c in cells}
         ds = "alg3" if "alg3" in present else sorted(present)[0]
     slices = {(c["dataset"], c["n_devices"], c["n_subchannels"],
-               c["policy"]["ra"], c["policy"]["sa"])
+               c.get("n_cells", 1), c["policy"]["ra"], c["policy"]["sa"])
               for c in cells if c["policy"]["ds"] == ds}
     if len(slices) != 1:
         return None    # heterogeneous configs: refuse, never pool
-    groups: dict[tuple[str, str], list] = {}
+    many_gaggs = len({g for _, g in aggs}) > 1
+    groups: dict[tuple[str, str, str], list] = {}
     for c in cells:
         if c["policy"]["ds"] != ds:
             continue
-        key = (c.get("scenario", "static"), c.get("aggregation", "sync"))
+        key = (c.get("scenario", "static"), c.get("aggregation", "sync"),
+               c.get("global_aggregation", "sync"))
         groups.setdefault(key, []).append(
             c["metrics"].get("time_to_target_s"))
-    scenarios = sorted({sc for sc, _ in groups})
-    agg_order = [a for a in AGG_COLORS if a in aggs] + [
-        a for a in aggs if a not in AGG_COLORS]
+    scenarios = sorted({sc for sc, _, _ in groups})
+    flat_aggs = sorted({a for a, _ in aggs})
+    agg_order = [a for a in AGG_COLORS if a in flat_aggs] + [
+        a for a in flat_aggs if a not in AGG_COLORS]
+    g_order = sorted({g for _, g in aggs})
     labels, values, colors = [], [], []
     for sc in scenarios:
         for ag in agg_order:
-            ts = groups.get((sc, ag))
-            if not ts or any(t is None for t in ts):
-                continue
-            labels.append(f"{sc} · {ag}")
-            values.append(float(np.mean(ts)))
-            colors.append(AGG_COLORS.get(ag, "#8a8f98"))
+            for g in g_order:
+                ts = groups.get((sc, ag, g))
+                if not ts or any(t is None for t in ts):
+                    continue
+                lab = f"{sc} · {ag}"
+                if many_gaggs:
+                    lab += f"/g.{g}"
+                labels.append(lab)
+                values.append(float(np.mean(ts)))
+                colors.append(AGG_COLORS.get(ag, "#8a8f98"))
     if not values:
         return None
     return bar_chart(

@@ -20,6 +20,7 @@ from typing import Sequence
 
 import jax
 
+from ..fl.hierarchical import HierSimConfig, run_hier_many
 from ..fl.sim import SimHistory, run_many
 from ..scenarios import scenario_name
 from .metrics import per_round_utilization, summarize_cell
@@ -52,14 +53,17 @@ def _cell_record(cell: SweepCell, hist: SimHistory,
     lat_all = (hist.latency_all if hist.latency_all is not None
                else hist.latency_s)
     util = per_round_utilization(hist, cfg.n_subchannels)
+    g_agg = getattr(cfg, "global_aggregation", "sync")
     return {
         "id": cell.cell_id,
         "dataset": cfg.dataset,
         "n_devices": cfg.n_devices,
         "n_subchannels": cfg.n_subchannels,
+        "n_cells": getattr(cfg, "n_cells", 1),
         "scenario": scenario_name(cfg.scenario),
         "aggregation": (cfg.aggregation if isinstance(cfg.aggregation, str)
                         else "custom"),
+        "global_aggregation": g_agg if isinstance(g_agg, str) else "custom",
         "seed": cfg.seed,
         "policy": {"ds": cfg.policy.ds, "ra": cfg.policy.ra,
                    "sa": cfg.policy.sa, "label": cfg.policy.label},
@@ -102,8 +106,29 @@ def run_sweep(spec: SweepSpec, *,
     """
     cells = spec.cells()
     t0 = time.time()
-    hists = run_many([c.config for c in cells], engine=engine,
-                     shard=shard, ra_backend=ra_backend)
+    # Flat and hierarchical cells dispatch through their own engines
+    # (run_many / run_hier_many — identical grouping disciplines), then
+    # reassemble in expansion order.
+    flat_idx = [i for i, c in enumerate(cells)
+                if not isinstance(c.config, HierSimConfig)]
+    hier_idx = [i for i, c in enumerate(cells)
+                if isinstance(c.config, HierSimConfig)]
+    hists: list[SimHistory | None] = [None] * len(cells)
+    if flat_idx:
+        for i, h in zip(flat_idx, run_many(
+                [cells[i].config for i in flat_idx], engine=engine,
+                shard=shard, ra_backend=ra_backend)):
+            hists[i] = h
+    if hier_idx:
+        hier_engine = "async" if engine == "async" else "scan"
+        if engine == "loop":
+            raise ValueError(
+                "engine='loop' cannot run hierarchical sweep cells — "
+                "use 'scan' or 'async'")
+        for i, h in zip(hier_idx, run_hier_many(
+                [cells[i].config for i in hier_idx], engine=hier_engine,
+                shard=shard, ra_backend=ra_backend)):
+            hists[i] = h
     wall_s = time.time() - t0
 
     record = {
@@ -138,15 +163,17 @@ def group_mean_curves(record: dict, *, dataset: str | None = None,
                       n_subchannels: int | None = None,
                       scenario: str | None = None,
                       aggregation: str | None = None,
+                      n_cells: int | None = None,
+                      global_aggregation: str | None = None,
                       key: str = "global_loss") -> dict[str, tuple]:
     """Average a per-cell eval curve over SEEDS, per policy label.
 
     Returns {policy_label: (rounds, mean_curve)} for cells matching the
-    given dataset / N / K / scenario / aggregation (each None = the
-    record's only value; raises if the record varies an unfiltered axis,
-    so heterogeneous configs are never silently pooled into one curve).
-    The label is the full ds+ra+sa scheme name, so distinct policies
-    never merge either.
+    given dataset / N / K / scenario / aggregation / topology (each None
+    = the record's only value; raises if the record varies an unfiltered
+    axis, so heterogeneous configs are never silently pooled into one
+    curve).  The label is the full ds+ra+sa scheme name, so distinct
+    policies never merge either.
     """
     cells = record["cells"]
 
@@ -167,13 +194,20 @@ def group_mean_curves(record: dict, *, dataset: str | None = None,
                        lambda c: c.get("scenario", "static"))
     aggregation = resolve("aggregation", aggregation,
                           lambda c: c.get("aggregation", "sync"))
+    n_cells = resolve("n_cells", n_cells, lambda c: c.get("n_cells", 1))
+    global_aggregation = resolve(
+        "global_aggregation", global_aggregation,
+        lambda c: c.get("global_aggregation", "sync"))
     by_label: dict[str, list] = {}
     rounds_by_label: dict[str, Sequence[int]] = {}
     for c in cells:
         if (c["dataset"], c["n_devices"], c["n_subchannels"],
                 c.get("scenario", "static"),
-                c.get("aggregation", "sync")) != (
-                dataset, n_devices, n_subchannels, scenario, aggregation):
+                c.get("aggregation", "sync"),
+                c.get("n_cells", 1),
+                c.get("global_aggregation", "sync")) != (
+                dataset, n_devices, n_subchannels, scenario, aggregation,
+                n_cells, global_aggregation):
             continue
         lab = c["policy"]["label"]
         by_label.setdefault(lab, []).append(c["curves"][key])

@@ -22,6 +22,7 @@ import re
 from typing import Any, Sequence
 
 from ..core.stackelberg import RoundPolicy, policy_grid
+from ..fl.hierarchical import HierSimConfig
 from ..fl.server import get_aggregation
 from ..fl.sim import SimConfig
 from ..scenarios import Scenario, get_scenario
@@ -30,11 +31,20 @@ __all__ = ["SweepSpec", "SweepCell"]
 
 _NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
 
-# SimConfig fields a spec may override beyond the grid axes.
+# Config fields a spec may override beyond the grid axes, per cell kind:
+# flat cells expand to `SimConfig`, hierarchical cells (cell_counts > 1 or
+# an async global tier) to `HierSimConfig`.  A mixed grid may only
+# override the intersection.
+_AXIS_FIELDS = ("dataset", "n_devices", "n_subchannels", "seed", "policy",
+                "rounds", "scenario", "aggregation")
 _OVERRIDABLE = frozenset(
     f.name for f in dataclasses.fields(SimConfig)
-    if f.name not in ("dataset", "n_devices", "n_subchannels", "seed",
-                      "policy", "rounds", "scenario", "aggregation"))
+    if f.name not in _AXIS_FIELDS)
+_HIER_OVERRIDABLE = frozenset(
+    f.name for f in dataclasses.fields(HierSimConfig)
+    if f.name not in _AXIS_FIELDS + (
+        "n_cells", "devices_per_cell", "subchannels_per_cell",
+        "global_aggregation"))
 
 
 def _axis(v) -> tuple:
@@ -50,7 +60,7 @@ class SweepCell:
 
     cell_id: str
     index: int
-    config: SimConfig
+    config: SimConfig | HierSimConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +85,18 @@ class SweepSpec:
         `fl.AGGREGATION_PRESETS`, DESIGN.md §12).  Async cells route
         through `engine="async"` automatically and SHARE the sync cells'
         sampled worlds and Γ solves, so the comparison is differential.
+      cell_counts: hierarchical-topology axis: how many base-station
+        cells split the N devices / K sub-channels (each must divide
+        both).  1 = the flat single-server network (`SimConfig`); > 1
+        expands to a `HierSimConfig` city (N/cells devices and K/cells
+        sub-channels per cell) routed through `fl.run_hier_many`, whose
+        two-tier grid still dispatches as one compiled program per shape
+        (DESIGN.md §15).
+      global_aggregation: the GLOBAL tier's commit discipline for
+        hierarchical cells, by preset name ("sync" = the two-tier
+        round barrier; async presets = the buffered staleness-weighted
+        global server).  A non-"sync" value makes the cell hierarchical
+        even at cell_counts=1.
       seeds: world seeds; cells differing only in policy or aggregation
         share one sampled world and one Γ solve (`fl.run_many` dedups
         them).
@@ -96,6 +118,8 @@ class SweepSpec:
     n_subchannels: Sequence[int] = (4,)
     scenarios: Sequence[str] = ("static",)
     aggregation: Sequence[str] = ("sync",)
+    cell_counts: Sequence[int] = (1,)
+    global_aggregation: Sequence[str] = ("sync",)
     seeds: Sequence[int] = (0,)
     rounds: int = 100
     target_loss: float | None = None
@@ -132,29 +156,52 @@ class SweepSpec:
         object.__setattr__(self, "scenarios",
                            tuple(norm(s) for s in sc_axis))
         for field in ("datasets", "ds", "ra", "sa", "n_devices",
-                      "n_subchannels", "scenarios", "aggregation", "seeds"):
+                      "n_subchannels", "scenarios", "aggregation",
+                      "cell_counts", "global_aggregation", "seeds"):
             object.__setattr__(self, field, _axis(getattr(self, field)))
         for sc in self.scenarios:   # validate eagerly: known AND path-safe
             get_scenario(sc)        # (names flow into cell ids + filenames)
             if not _NAME_RE.match(sc):
                 raise ValueError(f"scenario name not path-safe: {sc!r}")
-        for agg in self.aggregation:   # presets only: specs stay JSON-safe
-            if not isinstance(agg, str):
-                raise ValueError(
-                    f"aggregation axis values must be preset names, got "
-                    f"{agg!r} — register custom AsyncAggregation specs via "
-                    f"fl.AGGREGATION_PRESETS")
-            get_aggregation(agg)
-            if not _NAME_RE.match(agg):
-                raise ValueError(f"aggregation name not path-safe: {agg!r}")
+        for axis in ("aggregation", "global_aggregation"):
+            for agg in getattr(self, axis):  # presets only: JSON-safe specs
+                if not isinstance(agg, str):
+                    raise ValueError(
+                        f"{axis} axis values must be preset names, got "
+                        f"{agg!r} — register custom AsyncAggregation specs "
+                        f"via fl.AGGREGATION_PRESETS")
+                get_aggregation(agg)
+                if not _NAME_RE.match(agg):
+                    raise ValueError(f"{axis} name not path-safe: {agg!r}")
+        for nc in self.cell_counts:
+            if not isinstance(nc, int) or nc < 1:
+                raise ValueError(f"cell_counts must be positive ints, "
+                                 f"got {nc!r}")
+            for n in self.n_devices:
+                if n % nc:
+                    raise ValueError(
+                        f"cell_counts={nc} does not divide n_devices={n}")
+            for k in self.n_subchannels:
+                if k % nc:
+                    raise ValueError(
+                        f"cell_counts={nc} does not divide n_subchannels={k}")
         ov = self.overrides
         ov = tuple(sorted(ov.items())) if isinstance(ov, dict) else tuple(
             (str(k), v) for k, v in ov)
-        unknown = [k for k, _ in ov if k not in _OVERRIDABLE]
+        # Validate overrides against every cell KIND the grid expands to.
+        allowed: frozenset = frozenset(_OVERRIDABLE | _HIER_OVERRIDABLE)
+        if any(self._is_hier(nc, g) for nc in self.cell_counts
+               for g in self.global_aggregation):
+            allowed &= _HIER_OVERRIDABLE
+        if any(not self._is_hier(nc, g) for nc in self.cell_counts
+               for g in self.global_aggregation):
+            allowed &= _OVERRIDABLE
+        unknown = [k for k, _ in ov if k not in allowed]
         if unknown:
             raise ValueError(
-                f"overrides reference non-overridable/unknown SimConfig "
-                f"fields: {unknown} (allowed: {sorted(_OVERRIDABLE)})")
+                f"overrides reference fields unknown to (or not "
+                f"overridable on) every cell kind in this grid: {unknown} "
+                f"(allowed here: {sorted(allowed)})")
         object.__setattr__(self, "overrides", ov)
         self.policies  # validate scheme names eagerly
 
@@ -164,39 +211,66 @@ class SweepSpec:
         return policy_grid(ds=tuple(self.ds), ra=tuple(self.ra),
                            sa=tuple(self.sa))
 
+    @staticmethod
+    def _is_hier(n_cells: int, global_aggregation: str) -> bool:
+        """A grid point is hierarchical iff it has more than one cell or
+        a non-trivial global commit tier (a cells-of-one hierarchy with a
+        sync global tier IS the flat network — tests pin it bit-exact —
+        so it expands to the flat `SimConfig` and keeps flat cell ids)."""
+        return n_cells > 1 or global_aggregation != "sync"
+
     @property
     def n_cells(self) -> int:
         return (len(self.datasets) * len(self.n_devices)
                 * len(self.n_subchannels) * len(self.scenarios)
-                * len(self.aggregation) * len(self.policies)
+                * len(self.aggregation) * len(self.cell_counts)
+                * len(self.global_aggregation) * len(self.policies)
                 * len(self.seeds))
 
     def cells(self) -> list[SweepCell]:
-        """Expand the grid: dataset > (N, K) > scenario > aggregation >
-        policy > seed.
+        """Expand the grid: dataset > (N, K) > topology > scenario >
+        aggregation > global aggregation > policy > seed.
 
-        Ids are stable; the scenario and aggregation segments are omitted
-        for "static" / "sync" so pre-existing sweep ids (and committed
-        artifacts) stay unchanged.
+        Ids are stable; the topology, scenario, and aggregation segments
+        are omitted for 1 / "static" / "sync" / "sync" so pre-existing
+        sweep ids (and committed artifacts) stay unchanged.
         """
         out: list[SweepCell] = []
         ov = dict(self.overrides)
+        hier_ov = {k: v for k, v in ov.items() if k in _HIER_OVERRIDABLE}
         for dataset in self.datasets:
-            for n in self.n_devices:
-                for k in self.n_subchannels:
-                    for sc in self.scenarios:
-                        sc_part = "" if sc == "static" else f"-{sc}"
-                        for agg in self.aggregation:
-                            agg_part = "" if agg == "sync" else f"-{agg}"
+          for n in self.n_devices:
+            for k in self.n_subchannels:
+              for nc in self.cell_counts:
+                c_part = "" if nc == 1 else f"-C{nc}"
+                for sc in self.scenarios:
+                    sc_part = "" if sc == "static" else f"-{sc}"
+                    for agg in self.aggregation:
+                        agg_part = "" if agg == "sync" else f"-{agg}"
+                        for g_agg in self.global_aggregation:
+                            g_part = "" if g_agg == "sync" else f"-g.{g_agg}"
                             for pol in self.policies:
                                 for seed in self.seeds:
-                                    cfg = SimConfig(
-                                        dataset=dataset, n_devices=n,
-                                        n_subchannels=k, rounds=self.rounds,
-                                        policy=pol, seed=seed, scenario=sc,
-                                        aggregation=agg, **ov)
-                                    cid = (f"{dataset}-N{n}-K{k}{sc_part}"
-                                           f"{agg_part}-"
+                                    if self._is_hier(nc, g_agg):
+                                        cfg = HierSimConfig(
+                                            dataset=dataset, n_cells=nc,
+                                            devices_per_cell=n // nc,
+                                            subchannels_per_cell=k // nc,
+                                            rounds=self.rounds, policy=pol,
+                                            seed=seed, scenario=sc,
+                                            aggregation=agg,
+                                            global_aggregation=g_agg,
+                                            **hier_ov)
+                                    else:
+                                        cfg = SimConfig(
+                                            dataset=dataset, n_devices=n,
+                                            n_subchannels=k,
+                                            rounds=self.rounds,
+                                            policy=pol, seed=seed,
+                                            scenario=sc, aggregation=agg,
+                                            **ov)
+                                    cid = (f"{dataset}-N{n}-K{k}{c_part}"
+                                           f"{sc_part}{agg_part}{g_part}-"
                                            f"{pol.ds}.{pol.ra}.{pol.sa}"
                                            f"-s{seed}")
                                     out.append(SweepCell(cid, len(out), cfg))

@@ -15,9 +15,11 @@ Public surface:
                           `lax.scan`, buffered event timeline;
                           DESIGN.md §8, §10, §12);
   TABLE1               -- the paper's Table-I per-dataset settings;
-  HierSimConfig / run_hierarchical
-                       -- the multi-cell (two-tier FedAvg) extension,
-                          loop/scan engine matrix.
+  HierSimConfig / run_hierarchical / run_hier_many
+                       -- the multi-cell (two-tier FedAvg) extension:
+                          loop/scan engine matrix plus the two-tier
+                          buffered async event engine (`fl.hier_async`,
+                          DESIGN.md §15) and its sweep entry point.
 
 Sweeps over this surface (policy x seed grids, artifacts, figures) live
 in `repro.experiments`.
@@ -33,7 +35,7 @@ from .server import (
     staleness_weight,
 )
 from .sim import SimConfig, SimHistory, TABLE1, run_many, run_simulation
-from .hierarchical import HierSimConfig, run_hierarchical
+from .hierarchical import HierSimConfig, run_hier_many, run_hierarchical
 
 __all__ = [
     "make_local_trainer",
@@ -51,4 +53,5 @@ __all__ = [
     "run_many",
     "HierSimConfig",
     "run_hierarchical",
+    "run_hier_many",
 ]

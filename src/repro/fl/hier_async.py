@@ -1,0 +1,323 @@
+"""Two-tier buffered async engine: the event loop of `fl.async_loop`
+run per edge cell, committing into a global server that is ITSELF a
+buffered staleness-weighted aggregator (DESIGN.md §15).
+
+Topology and timing model
+-------------------------
+
+Each of the C cells runs PR 5's buffered event loop over its own devices'
+virtual clocks: the cell leader re-runs the Stackelberg step every global
+event (busy devices drop out of the Prop-1 mask), dispatched devices
+train from the CELL model `pcell[c]`, and their uploads fly for their own
+Γ-trace duration.  When the cell's `buffer` earliest uploads land, the
+cell commits them into `pcell[c]` exactly as the flat engine commits into
+its global model — translated updates w_i + (p_c - b_i), weights
+beta_n * f(staleness) — and the freshly committed cell model is then
+dispatched UPSTREAM as one in-flight update to the global tier:
+
+  gbuf[c]   the cell model in flight;
+  gbase[c]  the global model the flight was translated against;
+  g_rem[c]  its remaining upload time = the cell commit's event duration
+            delta_c (the global tier's per-cell virtual clock is derived
+            from cell commit-event times);
+  g_w[c]    its weight mass = the cell commit's total committed weight.
+
+The global server runs the SAME commit rule over cells that each cell
+runs over devices: `commit_event(g_rem, g_active, g_buffer, C)` waits for
+the `g_buffer` earliest cell flights, commits them with translated
+updates gbuf[c] + (w - gbase[c]) weighted g_w[c] * f(staleness), and the
+event's recorded latency is the global delta.
+
+Two structural rules keep the hierarchy well-posed:
+
+  * cell-commit gating — while a cell has a flight outstanding at the
+    global tier (`g_active[c]`), it makes NO further local commits (its
+    device clocks freeze; dispatches continue).  At most one flight per
+    cell is ever outstanding, so the cell-indexed global buffer (slot c =
+    cell c) structurally cannot overflow — exactly the per-device
+    invariant of the flat engine, lifted one tier.
+  * down-sync — after a global commit, EVERY cell with no outstanding
+    flight re-bases its cell model to the new global model (not only the
+    cells that just committed: a quiet cell would otherwise train from a
+    stale base forever).  Gating guarantees a re-based cell loses at most
+    one uncommitted local commit — and in the degenerate limits below it
+    loses exactly nothing.
+
+Degenerate limits (tests/test_hier_async_equivalence.py):
+
+  * full buffers at BOTH tiers: every dispatch commits locally the same
+    event, every cell flight commits globally the same event, staleness
+    is 0 at both tiers (weight multiplier exactly 1.0), both translations
+    vanish identically, and the recorded latency is max_c delta_c — the
+    sync hierarchy's cell-parallel eq.-9 barrier.  Every arithmetic step
+    reproduces `fl.hierarchical`'s scan engine bit-for-bit.
+  * C == 1: the cell model provably tracks the global model bitwise (the
+    single-slot global commit is an exact select), so the two-tier loop
+    collapses to the flat `engine="async"` event loop bit-for-bit.
+
+Segment resume (DESIGN.md §14): the carry is the loop's COMPLETE state,
+so ``build_hier_async_runner(..., segmented=True)`` returns a
+``run(data, carry) -> (carry, ys)`` closure — the grid analogue of
+`fl.async_loop`'s segmented mode, chaining S segments of length L into
+the single scan of length S*L bit-for-bit (``data["t0"]`` offsets the
+event index; `init_hier_async_carry` builds the t=0 carry).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .async_loop import commit_event
+from .engine_common import (
+    make_eval_fn,
+    make_leader_branches,
+    make_xs,
+    run_leader,
+    train_clients,
+)
+from .server import aggregate_buffered, staleness_weight
+
+__all__ = ["init_hier_async_carry", "build_hier_async_runner"]
+
+
+def init_hier_async_carry(params0, key0, n_cells: int, n: int):
+    """The two-tier event loop's t=0 carry.
+
+    Cell models start as exact copies of the global model; both buffer
+    pairs are zero-initialized (reads are gated by the active masks, so
+    the fill is unobservable — zeros keep the carry deterministic for the
+    segment-resume contract).  `gbase` zeros additionally make a
+    never-flown cell's translated global slot come out to exactly the
+    current global model, mirroring the sync engine's identity slot.
+    """
+    pcell0 = jax.tree_util.tree_map(
+        lambda l: jnp.repeat(l[None], n_cells, axis=0), params0)
+    buf0 = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((n_cells, n + 1) + l.shape, l.dtype), params0)
+    g0 = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((n_cells,) + l.shape, l.dtype), params0)
+    return (params0, key0, jnp.ones((n_cells, n), jnp.int32), pcell0,
+            buf0, buf0,
+            jnp.zeros((n_cells, n), jnp.int32),
+            jnp.zeros((n_cells, n), jnp.float32),
+            jnp.zeros((n_cells, n), bool),
+            g0, g0,
+            jnp.zeros(n_cells, jnp.int32),
+            jnp.zeros(n_cells, jnp.float32),
+            jnp.zeros(n_cells, bool),
+            jnp.zeros(n_cells, jnp.float32))
+
+
+def build_hier_async_runner(model, trainer,
+                            policies: Sequence[tuple[str, str]], *,
+                            n_cells: int, k: int, n: int, rounds: int,
+                            eval_mask: np.ndarray,
+                            track_gradnorm: bool = False,
+                            max_rounds: int = 200,
+                            segmented: bool = False):
+    """One fused `lax.scan` over global events, the (static) cell list
+    unrolled in its body: C cell event loops + the global commit tier.
+
+    Mirrors `fl.sim` runner conventions — same `data` dict contract as
+    `_scan_inputs` with a leading cell axis on the per-cell tensors
+    (beta/clusters/fixed_ids (C, ...), x_all/y_all/m_all (C, N, B, ...),
+    gamma/feas/energy (rounds, C, K, N), perms (rounds, C, ...)) plus the
+    commit-policy operands `buffer`/`stale_exp`/`server_lr` (cell tier)
+    and `g_buffer`/`g_stale_exp`/`g_server_lr` (global tier), all traced
+    so a whole two-tier aggregation grid shares one compiled program per
+    shape.  Returns the raw traceable fn(data) -> ys for the caller to
+    `jit` / `jit(vmap(...))`; with ``segmented=True`` returns
+    ``fn(data, carry) -> (carry, ys)`` instead (see module docstring).
+    """
+    n_clusters = int(math.ceil(n / k))
+    ndev = jnp.arange(n)
+    kslot = jnp.arange(k)
+    f0 = jnp.float32(0.0)
+
+    def scan_events(data, carry0):
+        cell_data = [
+            dict(data, beta=data["beta"][c], clusters=data["clusters"][c],
+                 fixed_ids=data["fixed_ids"][c], x_all=data["x_all"][c],
+                 y_all=data["y_all"][c], m_all=data["m_all"][c])
+            for c in range(n_cells)]
+        branches = [
+            make_leader_branches(policies, cell_data[c], k=k, n=n,
+                                 n_clusters=n_clusters,
+                                 max_rounds=max_rounds)
+            for c in range(n_cells)]
+        ev = make_eval_fn(model, data, track_gradnorm)
+
+        def body(carry, x):
+            (params, key, age, pcell, buf, base, disp_e, rem, active,
+             gbuf, gbase, g_disp, g_rem, g_active, g_w) = carry
+            # Gating snapshot: a cell whose flight is outstanding at the
+            # global tier makes no local commits THIS event.
+            busy = g_active
+
+            ages, deltas, energies = [], [], []
+            sel_all, tx_all, commit_all, remd_all = [], [], [], []
+            overflow = jnp.bool_(False)
+            for c in range(n_cells):
+                dc = cell_data[c]
+                xc = dict(x, gamma=x["gamma"][c], feas=x["feas"][c],
+                          energy=x["energy"][c],
+                          sel_perm=x["sel_perm"][c],
+                          assign_perm=x["assign_perm"][c])
+                act_c = active[c]
+                p_c = jax.tree_util.tree_map(lambda l: l[c], pcell)
+
+                # ---- cell leader plane: AoU selection over the FREE
+                # population of cell c ---------------------------------
+                feas_free = xc["feas"] & ~act_c[None, :]
+                lead = run_leader(branches[c], data["policy_idx"], age[c],
+                                  feas_free, xc)
+                tx = lead["transmitted"]
+                ch_g = jnp.where(tx, lead["channel_of"], 0)
+                t_dev = xc["gamma"][ch_g, ndev]
+                energies.append(
+                    jnp.sum(jnp.where(tx, xc["energy"][ch_g, ndev], f0)))
+                overflow = overflow | (tx & act_c).any()
+
+                # ---- cell learning plane: dispatched devices train from
+                # the CELL model (same PRNG discipline as the sync scan) -
+                tx_ids = jnp.nonzero(tx, size=k, fill_value=0)[0]
+                cnt = tx.sum()
+
+                def do_train(ops, dc=dc, tx_ids=tx_ids):
+                    p, kk = ops
+                    return train_clients(trainer, dc, k, p, kk, tx_ids)
+
+                def no_train(ops):
+                    p, kk = ops
+                    cp = jax.tree_util.tree_map(
+                        lambda l: jnp.zeros((k,) + l.shape, l.dtype), p)
+                    return cp, kk
+
+                cp, key = jax.lax.cond(cnt > 0, do_train, no_train,
+                                       (p_c, key))
+
+                # ---- buffer the flights (device-indexed; empty slots on
+                # the sacrificial row n) -------------------------------
+                ids_s = jnp.where(kslot < cnt, tx_ids, n)
+                buf = jax.tree_util.tree_map(
+                    lambda b, cl: b.at[c, ids_s].set(cl), buf, cp)
+                base = jax.tree_util.tree_map(
+                    lambda b, g: b.at[c, ids_s].set(
+                        jnp.broadcast_to(g, (k,) + g.shape)), base, p_c)
+                act_c = act_c | tx
+                rem_c = jnp.where(tx, t_dev, rem[c])
+                disp_c = jnp.where(tx, x["t"], disp_e[c])
+
+                # ---- cell commit, gated on the upstream flight --------
+                delta_raw, commit_raw = commit_event(rem_c, act_c,
+                                                     data["buffer"], k)
+                delta_c = jnp.where(busy[c], f0, delta_raw)
+                commit = commit_raw & ~busy[c]
+                stale = x["t"] - disp_c
+                w_st = staleness_weight(stale, data["stale_exp"])
+                cids = jnp.nonzero(commit, size=k, fill_value=0)[0]
+                commit_cnt = commit.sum()
+                cw = jnp.where(kslot < commit_cnt,
+                               dc["beta"][cids] * w_st[cids], f0)
+                translated = jax.tree_util.tree_map(
+                    lambda cl, bb, g: cl + (g - bb),
+                    jax.tree_util.tree_map(lambda b: b[c, cids], buf),
+                    jax.tree_util.tree_map(lambda b: b[c, cids], base),
+                    p_c)
+                p_c = aggregate_buffered(p_c, translated, cw,
+                                         data["server_lr"])
+                pcell = jax.tree_util.tree_map(
+                    lambda pl, l: pl.at[c].set(l), pcell, p_c)
+
+                # ---- post-commit cell state; committed cells dispatch
+                # their model upstream as ONE global flight -------------
+                act_c = act_c & ~commit
+                rem = rem.at[c].set(jnp.where(act_c, rem_c - delta_c, f0))
+                active = active.at[c].set(act_c)
+                disp_e = disp_e.at[c].set(disp_c)
+                ages.append(jnp.where(commit, 1, age[c] + 1)
+                            .astype(age.dtype))
+                deltas.append(delta_c)
+
+                fly = commit_cnt > 0
+                overflow = overflow | (fly & busy[c])
+                gbuf = jax.tree_util.tree_map(
+                    lambda gb, l: gb.at[c].set(
+                        jnp.where(fly, l, gb[c])), gbuf, p_c)
+                gbase = jax.tree_util.tree_map(
+                    lambda gb, l: gb.at[c].set(
+                        jnp.where(fly, l, gb[c])), gbase, params)
+                g_rem = g_rem.at[c].set(jnp.where(fly, delta_c, g_rem[c]))
+                g_disp = g_disp.at[c].set(jnp.where(fly, x["t"], g_disp[c]))
+                g_w = g_w.at[c].set(jnp.where(fly, cw.sum(), g_w[c]))
+                g_active = g_active.at[c].set(g_active[c] | fly)
+
+                sel_all.append(lead["selected"])
+                tx_all.append(tx)
+                commit_all.append(commit)
+                remd_all.append(jnp.where(tx, t_dev, f0))
+
+            # ---- global tier: the SAME commit rule, one tier up.  The
+            # buffer is cell-indexed (slot c = cell c), so weight-0 slots
+            # occupy the same summation positions as the sync engine's
+            # stacked cells ---------------------------------------------
+            g_delta, g_commit = commit_event(g_rem, g_active,
+                                             data["g_buffer"], n_cells)
+            g_stale = x["t"] - g_disp
+            gw = jnp.where(g_commit,
+                           g_w * staleness_weight(g_stale,
+                                                  data["g_stale_exp"]),
+                           f0)
+            translated_g = jax.tree_util.tree_map(
+                lambda gb, bb, g: gb + (g - bb), gbuf, gbase, params)
+            params = aggregate_buffered(params, translated_g, gw,
+                                        data["g_server_lr"])
+
+            g_active = g_active & ~g_commit
+            g_rem = jnp.where(g_active, g_rem - g_delta, f0)
+            # Down-sync: every flight-free cell re-bases onto the new
+            # global model (exact select; see module docstring).
+            free = ~g_active
+            pcell = jax.tree_util.tree_map(
+                lambda pl, g: jnp.where(
+                    free.reshape((n_cells,) + (1,) * g.ndim), g[None], pl),
+                pcell, params)
+
+            age_next = jnp.stack(ages)
+            loss, acc, gnorm = jax.lax.cond(
+                x["eval_mask"], ev, lambda p: (f0, f0, f0), params)
+
+            ys = dict(loss=loss, acc=acc, gnorm=gnorm, latency=g_delta,
+                      energy=jnp.stack(energies).sum(),
+                      selected=jnp.stack(sel_all),
+                      transmitted=jnp.stack(tx_all),
+                      age=age_next,
+                      committed=jnp.stack(commit_all),
+                      cell_committed=g_commit,
+                      latency_cells=jnp.stack(deltas),
+                      n_pending=active.sum(dtype=jnp.int32),
+                      g_pending=g_active.sum(dtype=jnp.int32),
+                      overflow=overflow,
+                      rem_dispatch=jnp.stack(remd_all))
+            return (params, key, age_next, pcell, buf, base, disp_e, rem,
+                    active, gbuf, gbase, g_disp, g_rem, g_active, g_w), ys
+
+        xs = make_xs(data, rounds, eval_mask)
+        if segmented:
+            xs["t"] = data["t0"] + xs["t"]
+        return jax.lax.scan(body, carry0, xs)
+
+    if segmented:
+        return scan_events
+
+    def run(data):
+        carry0 = init_hier_async_carry(data["params0"], data["key0"],
+                                       n_cells, n)
+        _, ys = scan_events(data, carry0)
+        return ys
+
+    return run

@@ -1,39 +1,57 @@
 """Hierarchical (multi-cell) FLOWN — the FL semantics of the `pod` mesh axis.
 
-Beyond-paper extension: the paper studies a single server; on the 2-pod
-production mesh the natural topology is two cells, each with its own base
-station running the paper's FULL Stackelberg round (own channels, own
-sub-channels, own AoU state), followed by an inter-cell (cross-pod)
-aggregation of the cell models weighted by transmitted data:
+Beyond-paper extension: the paper studies a single server; at city scale
+the natural topology is C cells, each with its own base station running
+the paper's FULL Stackelberg round (own channels, own sub-channels, own
+AoU state), followed by an inter-cell aggregation of the cell models
+weighted by transmitted data:
 
     cell c:   w_c = eq.(34) over its transmitting devices
     global:   w   = sum_c W_c w_c / sum_c W_c ,  W_c = sum_{n in tx_c} beta_n
 
-This is exactly what the multi-pod train_step computes when the gradient
-all-reduce crosses the `pod` axis with fl_weights set per cohort — this
-module provides the simulation-plane counterpart so cell-level scheduling
-policies can be compared end-to-end.
-
 Like the single-cell harness (`fl.sim`), the multi-cell loop pre-samples
-every cell's whole channel horizon and leader permutations up front,
-solves Γ for all cells in one batched Algorithm-1 call, and offers the
-same two engines (DESIGN.md §8, §10):
+every cell's whole environment horizon up front (scenario processes
+threaded through `_prepare_hier`: ONE shared mobility field across all
+C*N devices, cross-cell interference as coupled fading
+(`scenarios.sample_coupled_fading`), per-cell Markov churn and energy
+budgets), solves Γ for all cells in one batched Algorithm-1 call, and
+offers three engines (DESIGN.md §8, §10, §15):
 
-  engine="loop"  -- host round loop: per-cell `plan_round` + jitted training;
+  engine="loop"  -- host round loop: per-cell `plan_round` + jitted
+                    training;
   engine="scan"  -- ONE `lax.scan` over rounds whose body unrolls the
                     (static) cell list: per-cell jnp leader + training +
                     the inter-cell aggregation, fused into a single
-                    compiled program.
+                    compiled program;
+  engine="async" -- the two-tier buffered event loop (`fl.hier_async`):
+                    each cell runs the staleness-weighted event engine
+                    over its devices' virtual clocks and commits
+                    asynchronously into a global server that is itself a
+                    buffered staleness-weighted aggregator
+                    (`HierSimConfig.aggregation` names the cell tier's
+                    commit policy, `.global_aggregation` the global
+                    tier's; either being async routes here).
 
-Both engines consume identical pre-sampled randomness, so their per-cell
-transmitted sets, latencies, and losses coincide (differential test:
-tests/test_hierarchical.py::test_hierarchical_engine_equivalence).
+All engines consume identical pre-sampled randomness, so their per-cell
+transmitted sets, latencies, and losses coincide
+(tests/test_hierarchical.py pins loop == scan;
+tests/test_hier_async_equivalence.py pins the async engine's degenerate
+limits — full buffers at both tiers == the sync scan bit-exactly, and a
+single-cell hierarchy == the flat `engine="async"` path bit-exactly).
+
+`run_hier_many` is the sweep entry point: like `fl.sim.run_many` it
+dedups worlds across policy/aggregation variants, groups compatible
+configs into one compiled program per shape (`_hier_group_key`), and
+dispatches groups through `fl.sim._dispatch_group` (solo jit /
+jit(vmap) / `shard_map`), returning flat-compatible `SimHistory` records
+with (rounds, C*N) traces so every sweep metric works unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import time
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -44,22 +62,40 @@ from ..core import (
     RoundRandomness,
     WirelessConfig,
     init_aou,
-    leader_round,
     make_clusters,
     plan_round,
-    sample_channel_gains,
-    sample_topology,
-    solve_pairs_jit,
 )
 from ..core.monotonic import RAResult, fixed_ra
+from ..core.monotonic_jax import solve_pairs_fused, solve_pairs_jit
 from ..data.fl_datasets import make_dataset, partition_imbalanced_iid
 from ..models.small import get_small_model
-from ..train.optimizer import make_optimizer
-from .client import make_local_trainer
-from .server import aggregate
-from .sim import TABLE1, _pad_partition, _slice_ra
+from ..scenarios import (
+    Scenario,
+    apply_dynamics,
+    compose_gains,
+    get_scenario,
+    sample_churn,
+    sample_coupled_fading,
+    sample_distances,
+    sample_energy,
+)
+from .engine_common import make_eval_fn, make_leader_branches, make_xs, \
+    run_leader, train_clients
+from .hier_async import build_hier_async_runner
+from .server import AsyncAggregation, aggregate, get_aggregation
+from .sim import (
+    TABLE1,
+    SimHistory,
+    _dispatch_group,
+    _eval_rounds,
+    _group_trainer_and_policies,
+    _history_from_async,
+    _history_from_scan,
+    _pad_partition,
+    _slice_ra,
+)
 
-__all__ = ["HierSimConfig", "run_hierarchical"]
+__all__ = ["HierSimConfig", "run_hierarchical", "run_hier_many"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,7 +104,14 @@ class HierSimConfig:
 
     `n_cells` base stations each serve `devices_per_cell` devices over
     `subchannels_per_cell` uplink sub-channels; all cells share the global
-    model and the Table-I learning settings of `dataset`.
+    model and the Table-I learning settings of `dataset` (None overrides =
+    "use Table I", like `SimConfig`).  `scenario` names the shared
+    environment (one mobility field spans ALL cells; churn and energy are
+    per-cell processes), `cell_coupling` the cross-cell fading
+    correlation, and the two aggregation fields the commit policies of
+    the cell tier (`aggregation`) and the global tier
+    (`global_aggregation`) — either being async routes the simulation
+    through the two-tier event engine (`fl.hier_async`).
     """
 
     dataset: str = "mnist"
@@ -78,144 +121,569 @@ class HierSimConfig:
     rounds: int = 40
     policy: RoundPolicy = RoundPolicy()
     seed: int = 0
-    n_samples: int = 400
+    n_samples: int | None = 400
     local_steps: int = 3
+    radius_m: float = 500.0
+    pt_dbm: float = 10.0
+    e_max_j: float | None = None       # None -> Table I per-dataset value
+    lr: float | None = None
+    batch: int | None = None
+    optimizer: str | None = None
+    eval_every: int = 1
+    track_gradnorm: bool = False
+    scenario: str | Scenario = "static"
+    cell_coupling: float = 0.0         # cross-cell fading correlation in [0, 1]
+    aggregation: str | AsyncAggregation = "sync"         # cell tier
+    global_aggregation: str | AsyncAggregation = "sync"  # global tier
+
+    @property
+    def n_devices(self) -> int:
+        """Total device count across cells (sweep-metric compatibility)."""
+        return self.n_cells * self.devices_per_cell
+
+    @property
+    def n_subchannels(self) -> int:
+        """Total sub-channel count across cells."""
+        return self.n_cells * self.subchannels_per_cell
+
+    def wireless(self) -> WirelessConfig:
+        """The PER-CELL wireless world (each cell is one paper network)."""
+        t1 = TABLE1[self.dataset]
+        return WirelessConfig(
+            n_devices=self.devices_per_cell,
+            n_subchannels=self.subchannels_per_cell,
+            radius_m=self.radius_m,
+            pt_dbm=self.pt_dbm,
+            model_bits=t1["model_bits"],
+            e_max_j=self.e_max_j if self.e_max_j is not None else t1["e_max"],
+        )
 
 
 @dataclasses.dataclass
 class _HierPrepared:
-    """Per-cell worlds + whole-horizon Γ, sampled before the round loop."""
+    """Per-cell worlds + whole-horizon scenario traces, sampled up front."""
 
-    ds: object
-    beta: np.ndarray          # (C, N)
-    x: object                 # (C, N, Bmax, ...) padded client data
-    y: object
-    m: object
-    clusters: np.ndarray      # (C, N)
-    fixed_ids: np.ndarray     # (C, S)
-    h2_all: np.ndarray        # (C, rounds, K, N)
-    sel_perms: np.ndarray     # (C, rounds, N)
-    assign_perms: np.ndarray  # (C, rounds, K)
-    ras: list[RAResult]       # per cell, fields (rounds, K, N)
-    wcfg: WirelessConfig
+    cfg: HierSimConfig
+    wcfg: WirelessConfig           # per-cell wireless constants
     rng: np.random.Generator
+    ds: Any
+    parts: list                    # per-cell FLPartition (for re-padding)
+    beta: np.ndarray               # (C, N) float64
+    x: Any                         # (C, N, Bmax, ...) padded client data
+    y: Any
+    m: Any
+    clusters: np.ndarray           # (C, N)
+    fixed_ids: np.ndarray          # (C, S)
+    h2_all: np.ndarray             # (C, rounds, K, N)
+    sel_perms: np.ndarray          # (C, rounds, N)
+    assign_perms: np.ndarray       # (C, rounds, K)
+    distances: np.ndarray          # (C, rounds, N) shared mobility field
+    avail: np.ndarray              # (C, rounds, N) per-cell churn
+    slowdown: np.ndarray           # (C, rounds, N)
+    emax_all: np.ndarray           # (C, rounds, N)
 
 
-def _prepare_hier(cfg: HierSimConfig, ra_backend: str | None) -> _HierPrepared:
+def _prepare_hier(cfg: HierSimConfig) -> _HierPrepared:
+    """Sample the multi-cell world + whole-horizon scenario environment.
+
+    The stream mirrors `fl.sim._prepare` phase for phase with per-cell
+    blocks — dataset, per-cell partitions, ONE shared mobility field over
+    all C*N devices (one physical city; cells are spatial neighborhoods
+    of the same walker population), per-cell leader state
+    (clusters/fixed_ids), coupled cross-cell fading, per-cell injected
+    permutations, per-cell churn, per-cell energy.  At C == 1 every block
+    degenerates to exactly one flat-stream call in the flat order, so a
+    single-cell hierarchy consumes the BIT-IDENTICAL rng stream of the
+    flat `_prepare` — the anchor of the cell-of-one differential pin.
+    """
     rng = np.random.default_rng(cfg.seed)
-    t1 = TABLE1[cfg.dataset]
-    ds = make_dataset(cfg.dataset, rng, n=cfg.n_samples)
-    n, k = cfg.devices_per_cell, cfg.subchannels_per_cell
-    wcfg = WirelessConfig(n_devices=n, n_subchannels=k,
-                          model_bits=t1["model_bits"], e_max_j=t1["e_max"])
+    wcfg = cfg.wireless()
+    scn = get_scenario(cfg.scenario)
+    c_n, n, k = cfg.n_cells, cfg.devices_per_cell, cfg.subchannels_per_cell
 
-    beta, xs, ys_, ms, clusters, fixed_ids, topos = [], [], [], [], [], [], []
-    bmax = 0
-    parts = []
-    for _ in range(cfg.n_cells):
-        part = partition_imbalanced_iid(rng, ds.n, n)
-        parts.append(part)
-        bmax = max(bmax, int(part.beta.max()))
-        topos.append(sample_topology(rng, wcfg))
+    ds_kw = {} if cfg.n_samples is None else {"n": cfg.n_samples}
+    ds = make_dataset(cfg.dataset, rng, **ds_kw)
+    parts = [partition_imbalanced_iid(rng, ds.n, n) for _ in range(c_n)]
+    beta = np.stack([p.beta.astype(np.float64) for p in parts])
+    bmax = max(int(p.beta.max()) for p in parts)
+    padded = [_pad_partition(ds, p, bmax) for p in parts]
+    x = jnp.stack([p[0] for p in padded])
+    y = jnp.stack([p[1] for p in padded])
+    m = jnp.stack([p[2] for p in padded])
+
+    # One SHARED mobility field: all C*N devices walk one world draw.
+    dist_flat = sample_distances(
+        rng, dataclasses.replace(wcfg, n_devices=c_n * n), scn.mobility,
+        cfg.rounds)                                     # (rounds, C*N)
+    distances = np.ascontiguousarray(
+        dist_flat.reshape(cfg.rounds, c_n, n).transpose(1, 0, 2))
+
+    clusters, fixed_ids = [], []
+    for _ in range(c_n):
         clusters.append(make_clusters(n, k, rng))
         fixed_ids.append(rng.permutation(n)[: min(k, n)])
-    for part in parts:
-        beta.append(part.beta.astype(np.float64))
-        x, y, m = _pad_partition(ds, part, bmax)
-        xs.append(x); ys_.append(y); ms.append(m)
 
-    h2_all = np.stack([
-        np.stack([sample_channel_gains(rng, wcfg, topo)
-                  for _ in range(cfg.rounds)])
-        for topo in topos])
+    g2_all = sample_coupled_fading(rng, wcfg, scn.fading, cfg.rounds, c_n,
+                                   cfg.cell_coupling)   # (C, rounds, K, N)
+    h2_all = np.stack([compose_gains(g2_all[c], distances[c], wcfg)
+                       for c in range(c_n)])
+
     sel_perms = np.stack([
         np.stack([rng.permutation(n) for _ in range(cfg.rounds)])
-        for _ in range(cfg.n_cells)])
+        for _ in range(c_n)])
     assign_perms = np.stack([
         np.stack([rng.permutation(k) for _ in range(cfg.rounds)])
-        for _ in range(cfg.n_cells)])
+        for _ in range(c_n)])
 
-    beta = np.stack(beta)
-    if cfg.policy.ra == "mo":
-        # One batched Algorithm-1 call over every (cell, round, k, n) pair.
-        flat = solve_pairs_jit(
-            np.broadcast_to(beta[:, None, None, :], h2_all.shape).reshape(-1),
-            h2_all.reshape(-1), wcfg, backend=ra_backend)
-        shp = h2_all.shape[1:]
-        sz = int(np.prod(shp))
-        ras = [RAResult(*(getattr(flat, f.name)[c * sz:(c + 1) * sz]
-                          .reshape(shp) for f in dataclasses.fields(RAResult)))
-               for c in range(cfg.n_cells)]
-    else:
-        ras = [fixed_ra(beta[c][None, None, :], h2_all[c], wcfg)
-               for c in range(cfg.n_cells)]
+    churn = [sample_churn(rng, scn.churn, cfg.rounds, n) for _ in range(c_n)]
+    avail = np.stack([a for a, _ in churn])
+    slowdown = np.stack([s for _, s in churn])
+    emax_all = np.stack([sample_energy(rng, wcfg, scn.energy, cfg.rounds)
+                         for _ in range(c_n)])
 
     return _HierPrepared(
-        ds=ds, beta=beta,
-        x=jnp.stack(xs), y=jnp.stack(ys_), m=jnp.stack(ms),
+        cfg=cfg, wcfg=wcfg, rng=rng, ds=ds, parts=parts, beta=beta,
+        x=x, y=y, m=m,
         clusters=np.stack(clusters), fixed_ids=np.stack(fixed_ids),
         h2_all=h2_all, sel_perms=sel_perms, assign_perms=assign_perms,
-        ras=ras, wcfg=wcfg, rng=rng)
+        distances=distances, avail=avail, slowdown=slowdown,
+        emax_all=emax_all)
 
 
-def run_hierarchical(cfg: HierSimConfig, *, engine: str = "loop",
-                     ra_backend: str | None = None) -> dict:
-    """Two-tier FedAvg: per-cell Stackelberg rounds + inter-cell aggregation.
+def _solve_hier_horizons(
+    preps: Sequence[_HierPrepared], backend: str | None,
+    solver: str = "fused", shard: bool | None = None,
+) -> tuple[list[list[RAResult]], list[float]]:
+    """Algorithm 1 for every (cell, round) of every prepared simulation.
 
-    Args:
-      cfg: multi-cell settings; `cfg.policy` applies to every cell.
-      engine: "loop" (host round loop) or "scan" (one fused `lax.scan`
-        over rounds with the cell list unrolled in its body).  Both
-        consume identical pre-sampled randomness and agree on per-cell
-        transmitted sets and losses (DESIGN.md §10).
-      ra_backend: Γ-solver projection backend override.
-
-    Returns {"loss": (rounds,), "latency": (rounds,),
-             "tx": (rounds, n_cells, N) bool, "wall_s": float}.
+    Each unique world's C cell horizons flatten into ONE solver call (the
+    solver is elementwise over pairs, so cells concatenate freely and the
+    per-cell slices equal solo solves bitwise — including, at C == 1, the
+    flat `_solve_horizons` result).  Worlds shared across policy-only /
+    aggregation-only variants are solved once and aliased.
     """
-    if engine not in ("loop", "scan"):
-        raise ValueError(f"unknown engine: {engine}")
+    out: list[list[RAResult] | None] = [None] * len(preps)
+    secs = [0.0] * len(preps)
+    rep_idx: dict[tuple[int, str], int] = {}
+    for i, p in enumerate(preps):
+        key = (id(p.h2_all), p.cfg.policy.ra)
+        if key in rep_idx:
+            out[i] = out[rep_idx[key]]
+            continue
+        rep_idx[key] = i
+        c_n = p.cfg.n_cells
+        shp = p.h2_all.shape[1:]                  # (rounds, K, N)
+        sz = int(np.prod(shp))
+        t0 = time.time()
+        if p.cfg.policy.ra == "mo":
+            beta_cat = np.broadcast_to(
+                p.beta[:, None, None, :], p.h2_all.shape).reshape(-1)
+            emax_cat = np.broadcast_to(
+                p.emax_all[:, :, None, :], p.h2_all.shape).reshape(-1)
+            h2_cat = p.h2_all.reshape(-1)
+            if solver == "fused":
+                flat = solve_pairs_fused(beta_cat, h2_cat, p.wcfg, emax_cat,
+                                         backend=backend, shard=shard)
+            else:
+                flat = solve_pairs_jit(beta_cat, h2_cat, p.wcfg, emax_cat,
+                                       backend=backend)
+            out[i] = [
+                RAResult(*(getattr(flat, f.name)[c * sz:(c + 1) * sz]
+                           .reshape(shp)
+                           for f in dataclasses.fields(RAResult)))
+                for c in range(c_n)]
+        else:
+            out[i] = [
+                fixed_ra(p.beta[c][None, None, :], p.h2_all[c], p.wcfg,
+                         np.broadcast_to(p.emax_all[c][:, None, :], shp))
+                for c in range(c_n)]
+        secs[i] = time.time() - t0
+    return out, secs
+
+
+def _apply_hier_dynamics(prep: _HierPrepared,
+                         ras: list[RAResult]) -> list[RAResult]:
+    """Fold per-cell churn availability + straggler slowdowns into each
+    cell's solved whole-horizon RAResult (DESIGN.md §11), once, before
+    any engine runs."""
+    return [apply_dynamics(ra, prep.avail[c], prep.slowdown[c],
+                           prep.beta[c], prep.wcfg)
+            for c, ra in enumerate(ras)]
+
+
+def _check_hier_f32(preps: Sequence[_HierPrepared]) -> None:
+    # Mirror of `fl.sim._check_f32_priorities`: device-resident leaders
+    # rank float32 age*beta products, exact only below 2^24.
+    for p in preps:
+        worst = (p.cfg.rounds + 1) * float(p.beta.max())
+        if worst >= 2 ** 24:
+            raise ValueError(
+                f"hier scan/async engines: age*beta products may reach "
+                f"{worst:.3g} >= 2^24, where float32 priorities lose host "
+                f"equivalence — use engine='loop' or shrink rounds/data")
+
+
+# ---------------------------------------------------------------------------
+# engine="scan" / engine="async": device-resident two-tier loops
+# ---------------------------------------------------------------------------
+
+def _hier_scan_inputs(prep: _HierPrepared, ras: list[RAResult], bmax: int,
+                      policy_idx: int = 0) -> dict:
+    """The hier `data` dict: `fl.sim._scan_inputs` with a leading cell
+    axis on the per-cell tensors (beta/clusters/fixed_ids/client data)
+    and a cell axis SECOND on the per-round traces (gamma/feas/energy
+    (rounds, C, K, N), perms (rounds, C, ...))."""
+    cfg = prep.cfg
+    if bmax == prep.x.shape[2]:
+        x, y, m = prep.x, prep.y, prep.m
+    else:
+        padded = [_pad_partition(prep.ds, p, bmax) for p in prep.parts]
+        x = jnp.stack([p[0] for p in padded])
+        y = jnp.stack([p[1] for p in padded])
+        m = jnp.stack([p[2] for p in padded])
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k_init = jax.random.split(key)
+    model = get_small_model(cfg.dataset)
+    return dict(
+        params0=model.init(k_init),
+        policy_idx=jnp.int32(policy_idx),
+        key0=key,
+        beta=jnp.asarray(prep.beta, jnp.float32),
+        x_all=x, y_all=y, m_all=m,
+        x_full=jnp.asarray(prep.ds.x), y_full=jnp.asarray(prep.ds.y),
+        clusters=jnp.asarray(prep.clusters, jnp.int32),
+        fixed_ids=jnp.asarray(prep.fixed_ids, jnp.int32),
+        gamma=jnp.asarray(np.stack([ra.time_s for ra in ras], axis=1),
+                          jnp.float32),
+        feas=jnp.asarray(np.stack([ra.feasible for ra in ras], axis=1)),
+        energy=jnp.asarray(
+            np.stack([np.where(np.isfinite(ra.energy_j), ra.energy_j, 0.0)
+                      for ra in ras], axis=1), jnp.float32),
+        sel_perms=jnp.asarray(prep.sel_perms.swapaxes(0, 1), jnp.int32),
+        assign_perms=jnp.asarray(prep.assign_perms.swapaxes(0, 1),
+                                 jnp.int32),
+    )
+
+
+def _build_hier_scan_runner(cfg: HierSimConfig, model, trainer,
+                            policies: Sequence[tuple[str, str]] | None = None):
+    """The fused multi-cell SYNC round loop: one `lax.scan` over rounds,
+    cells unrolled in the body, eq.-34 at both tiers.  Per-cell pieces
+    (leader branches, training PRNG discipline, eval) are the shared
+    `engine_common` ops, traced in the SAME order the two-tier async
+    engine traces them — the sync side of the full-buffer differential."""
+    n, k = cfg.devices_per_cell, cfg.subchannels_per_cell
+    n_cells = cfg.n_cells
+    rounds, eval_every = cfg.rounds, cfg.eval_every
+    n_clusters = int(math.ceil(n / k))
+    ndev = jnp.arange(n)
+    kslot = jnp.arange(k)
+    f0 = jnp.float32(0.0)
+    if policies is None:
+        policies = [(cfg.policy.ds, cfg.policy.sa)]
+
+    def run(data):
+        cell_data = [
+            dict(data, beta=data["beta"][c], clusters=data["clusters"][c],
+                 fixed_ids=data["fixed_ids"][c], x_all=data["x_all"][c],
+                 y_all=data["y_all"][c], m_all=data["m_all"][c])
+            for c in range(n_cells)]
+        branches = [
+            make_leader_branches(policies, cell_data[c], k=k, n=n,
+                                 n_clusters=n_clusters)
+            for c in range(n_cells)]
+        ev = make_eval_fn(model, data, cfg.track_gradnorm)
+
+        def body(carry, x):
+            params, key, age = carry                     # age (C, N)
+            cell_out, weights, ages, energies = [], [], [], []
+            sel_all, tx_all = [], []
+            latency = f0
+            for c in range(n_cells):
+                dc = cell_data[c]
+                xc = dict(x, gamma=x["gamma"][c], feas=x["feas"][c],
+                          energy=x["energy"][c],
+                          sel_perm=x["sel_perm"][c],
+                          assign_perm=x["assign_perm"][c])
+                lead = run_leader(branches[c], data["policy_idx"], age[c],
+                                  xc["feas"], xc)
+                tx = lead["transmitted"]
+                ch_g = jnp.where(tx, lead["channel_of"], 0)
+                t_dev = xc["gamma"][ch_g, ndev]
+                cell_lat = jnp.where(
+                    tx.any(), jnp.max(jnp.where(tx, t_dev, -jnp.inf)), f0)
+                latency = jnp.maximum(latency, cell_lat)
+                energies.append(
+                    jnp.sum(jnp.where(tx, xc["energy"][ch_g, ndev], f0)))
+                tx_ids = jnp.nonzero(tx, size=k, fill_value=0)[0]
+                cnt = tx.sum()
+                slot_w = jnp.where(kslot < cnt, dc["beta"][tx_ids], f0)
+
+                def do_train(ops, dc=dc, tx_ids=tx_ids, slot_w=slot_w):
+                    p, kk = ops
+                    cp, kk = train_clients(trainer, dc, k, p, kk, tx_ids)
+                    return aggregate(p, cp, slot_w), kk
+
+                w_cell, key = jax.lax.cond(
+                    cnt > 0, do_train, lambda ops: ops, (params, key))
+                cell_out.append(w_cell)
+                weights.append(slot_w.sum())
+                ages.append(lead["age_next"])
+                sel_all.append(lead["selected"])
+                tx_all.append(tx)
+
+            stacked = jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves), *cell_out)
+            params = aggregate(params, stacked, jnp.stack(weights))
+            age_next = jnp.stack(ages)
+            loss, acc, gnorm = jax.lax.cond(
+                x["eval_mask"], ev, lambda p: (f0, f0, f0), params)
+            ys = dict(loss=loss, acc=acc, gnorm=gnorm, latency=latency,
+                      energy=jnp.stack(energies).sum(),
+                      selected=jnp.stack(sel_all),
+                      transmitted=jnp.stack(tx_all), age=age_next)
+            return (params, key, age_next), ys
+
+        eval_mask = np.zeros(rounds, bool)
+        eval_mask[_eval_rounds(rounds, eval_every)] = True
+        carry0 = (data["params0"], data["key0"],
+                  jnp.ones((n_cells, n), jnp.int32))
+        _, ys = jax.lax.scan(body, carry0, make_xs(data, rounds, eval_mask))
+        return ys
+
+    return run
+
+
+def _hier_async_specs(cfg: HierSimConfig) -> tuple[AsyncAggregation,
+                                                   AsyncAggregation]:
+    """Cell-tier and global-tier commit policies.  A "sync" tier forced
+    through the event engine runs the degenerate full-buffer barrier —
+    the differential anchor at that tier."""
+    barrier = AsyncAggregation(buffer="full", staleness="const")
+    spec = get_aggregation(cfg.aggregation) or barrier
+    g_spec = get_aggregation(cfg.global_aggregation) or barrier
+    return spec, g_spec
+
+
+def _flatten_hier_ys(ys: dict, rounds: int) -> dict:
+    """Collapse (rounds, C, N) device traces to the flat engines'
+    (rounds, C*N) layout so `fl.sim`'s history builders apply verbatim."""
+    out = dict(ys)
+    for key in ("selected", "transmitted", "age", "committed",
+                "rem_dispatch"):
+        if key in out:
+            out[key] = np.asarray(out[key]).reshape(rounds, -1)
+    return out
+
+
+def _history_from_hier(cfg: HierSimConfig, beta_flat: np.ndarray, ys: dict,
+                       wall_s: float, plan_wall_s: float,
+                       mode: str) -> SimHistory:
+    flat = _flatten_hier_ys(ys, cfg.rounds)
+    if mode == "async":
+        hist = _history_from_async(cfg, beta_flat, flat, wall_s,
+                                   plan_wall_s)
+        hist.async_trace.update(
+            g_pending=np.asarray(ys["g_pending"], np.int64),
+            cell_committed=np.asarray(ys["cell_committed"]),
+            latency_cells=np.asarray(ys["latency_cells"], np.float64),
+        )
+    else:
+        hist = _history_from_scan(cfg, beta_flat, flat, wall_s, plan_wall_s)
+    return hist
+
+
+def _run_hier_group(mode: str, cfgs: Sequence[HierSimConfig],
+                    preps: Sequence[_HierPrepared],
+                    ras_list: Sequence[list[RAResult]],
+                    plan_walls: Sequence[float],
+                    shard: bool = False) -> list[SimHistory]:
+    """Run one static-shape group of hierarchical simulations through the
+    scan or two-tier async engine — grouping/batching/sharding mirror
+    `fl.sim` exactly (stacked cells, `lax.switch` policy branches,
+    `_dispatch_group`); the four commit-policy operands are traced data,
+    so a whole two-tier aggregation grid shares one compiled program."""
+    cfg = cfgs[0]
+    model, trainer, policies, pol_idx = _group_trainer_and_policies(cfgs)
+    _check_hier_f32(preps)
+    if mode == "scan":
+        run = _build_hier_scan_runner(cfg, model, trainer, policies)
+    else:
+        eval_mask = np.zeros(cfg.rounds, bool)
+        eval_mask[_eval_rounds(cfg.rounds, cfg.eval_every)] = True
+        run = build_hier_async_runner(
+            model, trainer, policies, n_cells=cfg.n_cells,
+            k=cfg.subchannels_per_cell, n=cfg.devices_per_cell,
+            rounds=cfg.rounds, eval_mask=eval_mask,
+            track_gradnorm=cfg.track_gradnorm)
+
     t_start = time.time()
-    prep = _prepare_hier(cfg, ra_backend)
+    bmax = max(int(p.x.shape[2]) for p in preps)
+    datas = []
+    for c, p, ras, i in zip(cfgs, preps, ras_list, pol_idx):
+        d = _hier_scan_inputs(p, ras, bmax, i)
+        if mode == "async":
+            spec, g_spec = _hier_async_specs(c)
+            d["buffer"] = jnp.int32(spec.resolve_buffer(
+                cfg.devices_per_cell, cfg.subchannels_per_cell))
+            d["stale_exp"] = jnp.float32(spec.stale_exponent())
+            d["server_lr"] = jnp.float32(spec.server_lr)
+            d["g_buffer"] = jnp.int32(g_spec.resolve_buffer(
+                cfg.n_cells, cfg.n_cells))
+            d["g_stale_exp"] = jnp.float32(g_spec.stale_exponent())
+            d["g_server_lr"] = jnp.float32(g_spec.server_lr)
+        datas.append(d)
+    ys = _dispatch_group(run, datas, shard)
+    wall_each = (time.time() - t_start) / len(datas)
+
+    out = []
+    for i, (c, p, w) in enumerate(zip(cfgs, preps, plan_walls)):
+        ys_i = ys if len(datas) == 1 else jax.tree_util.tree_map(
+            lambda leaf: leaf[i], ys)
+        out.append(_history_from_hier(c, p.beta.reshape(-1), ys_i,
+                                      wall_each + w, w, mode))
+    return out
+
+
+def _hier_group_key(cfg: HierSimConfig) -> HierSimConfig:
+    """Configs identical up to seed/wireless-data/policy/scenario/
+    aggregation fields share one compiled two-tier program — same
+    normalization logic as `fl.sim._scan_group_key`, extended with the
+    hier-only data axes (global aggregation, cell coupling)."""
+    return dataclasses.replace(
+        cfg, seed=0, radius_m=0.0, pt_dbm=0.0, e_max_j=None,
+        policy=RoundPolicy(), scenario="static", cell_coupling=0.0,
+        aggregation="sync", global_aggregation="sync")
+
+
+def _hier_prep_key(cfg: HierSimConfig) -> HierSimConfig:
+    """Configs identical up to policy/aggregation share one prepared
+    world (all sampling precedes both), like `fl.sim._prep_key`."""
+    return dataclasses.replace(cfg, policy=RoundPolicy(),
+                               aggregation="sync",
+                               global_aggregation="sync")
+
+
+def run_hier_many(cfgs: Sequence[HierSimConfig], *,
+                  engine: str = "scan",
+                  ra_backend: str | None = None,
+                  ra_solver: str = "fused",
+                  shard: bool | None = None) -> list[SimHistory]:
+    """Run several hierarchical simulations as few compiled programs.
+
+    The multi-cell analogue of `fl.sim.run_many`: worlds are deduped
+    across policy/aggregation variants, Γ is solved once per world (all
+    cells in one elementwise batch), scenario dynamics fold in once, and
+    compatible configs group into one jit / jit(vmap) / `shard_map`
+    program per shape.  Histories come back flat-compatible: (rounds,
+    C*N) traces, so every `repro.experiments` metric applies unchanged.
+
+    engine: "scan" (sync two-tier barrier) or "async" (two-tier buffered
+    event loop).  Cells whose `aggregation` OR `global_aggregation` name
+    an async policy route through the async engine regardless; the host
+    "loop" engine is single-sim only (`run_hierarchical`).
+    """
+    if engine not in ("scan", "async"):
+        raise ValueError(f"unknown engine: {engine} "
+                         f"(run_hier_many supports 'scan' and 'async'; the "
+                         f"host 'loop' engine is run_hierarchical-only)")
+    if ra_solver not in ("fused", "step"):
+        raise ValueError(f"unknown ra_solver: {ra_solver}")
+    if shard is None:
+        shard = jax.local_device_count() > 1
+    modes = ["async" if engine == "async"
+             or get_aggregation(c.aggregation) is not None
+             or get_aggregation(c.global_aggregation) is not None
+             else engine for c in cfgs]
+
+    preps_by_key: dict[HierSimConfig, _HierPrepared] = {}
+    preps: list[_HierPrepared] = []
+    for c in cfgs:
+        key = _hier_prep_key(c)
+        if key not in preps_by_key:
+            preps_by_key[key] = _prepare_hier(c)
+        shared = preps_by_key[key]
+        preps.append(shared if shared.cfg == c
+                     else dataclasses.replace(shared, cfg=c))
+
+    ras_list, plan_walls = _solve_hier_horizons(
+        preps, ra_backend, solver=ra_solver, shard=shard)
+    transformed: dict[int, list[RAResult]] = {}
+    for i, (p, ras) in enumerate(zip(preps, ras_list)):
+        if id(ras) not in transformed:
+            transformed[id(ras)] = _apply_hier_dynamics(p, ras)
+        ras_list[i] = transformed[id(ras)]
+
+    out: list[SimHistory | None] = [None] * len(cfgs)
+    groups: dict[tuple[str, HierSimConfig], list[int]] = {}
+    for i, (c, mode) in enumerate(zip(cfgs, modes)):
+        groups.setdefault((mode, _hier_group_key(c)), []).append(i)
+    for (mode, _), idx in groups.items():
+        hists = _run_hier_group(mode, [cfgs[i] for i in idx],
+                                [preps[i] for i in idx],
+                                [ras_list[i] for i in idx],
+                                [plan_walls[i] for i in idx],
+                                shard=shard)
+        for i, h in zip(idx, hists):
+            out[i] = h
+    return out
+
+
+# ---------------------------------------------------------------------------
+# engine="loop" + the single-sim dict entry point
+# ---------------------------------------------------------------------------
+
+def _run_hier_loop(cfg: HierSimConfig, ra_backend: str | None) -> dict:
+    """Host round loop: per-cell `plan_round` + jitted training."""
+    t_start = time.time()
+    prep = _prepare_hier(cfg)
+    ras_list, plan_walls = _solve_hier_horizons([prep], ra_backend)
+    ras = _apply_hier_dynamics(prep, ras_list[0])
     t1 = TABLE1[cfg.dataset]
     model = get_small_model(cfg.dataset)
     key = jax.random.PRNGKey(cfg.seed)
     key, k0 = jax.random.split(key)
     params = model.init(k0)
-    opt = make_optimizer(t1["optimizer"], t1["lr"])
-    x_full, y_full = jnp.asarray(prep.ds.x), jnp.asarray(prep.ds.y)
-
-    if engine == "scan":
-        trainer = make_local_trainer(
-            model.loss, opt, batch_size=t1["batch"],
-            local_steps=cfg.local_steps,
-            loss_per_example=model.loss_per_example, jit=False)
-        out = _run_hier_scan(cfg, prep, model, trainer, params, key,
-                             x_full, y_full)
-        out["wall_s"] = time.time() - t_start
-        return out
-
+    from ..train.optimizer import make_optimizer
+    from .client import make_local_trainer
+    opt = make_optimizer(cfg.optimizer or t1["optimizer"],
+                         cfg.lr or t1["lr"])
     trainer = make_local_trainer(
-        model.loss, opt, batch_size=t1["batch"], local_steps=cfg.local_steps,
+        model.loss, opt, batch_size=cfg.batch or t1["batch"],
+        local_steps=cfg.local_steps,
         loss_per_example=model.loss_per_example)
     eval_loss = jax.jit(model.loss)
+    eval_acc = jax.jit(model.accuracy)
+    x_full, y_full = jnp.asarray(prep.ds.x), jnp.asarray(prep.ds.y)
+
     aous = [init_aou(cfg.devices_per_cell) for _ in range(cfg.n_cells)]
     k_slots = cfg.subchannels_per_cell
-    losses, latencies = [], []
-    tx_trace = np.zeros((cfg.rounds, cfg.n_cells, cfg.devices_per_cell), bool)
+    eval_at = set(_eval_rounds(cfg.rounds, cfg.eval_every))
+    losses, accs, eval_rounds = [], [], []
+    # Full per-round traces regardless of eval sampling: convergence time
+    # accumulates unsampled rounds too (the PR-2 cum_time_s lesson).
+    lat_all = np.zeros(cfg.rounds)
+    energy_all = np.zeros(cfg.rounds)
+    tx_trace = np.zeros((cfg.rounds, cfg.n_cells, cfg.devices_per_cell),
+                        bool)
+    age_trace = np.zeros((cfg.rounds, cfg.n_cells, cfg.devices_per_cell),
+                         np.int64)
     for t in range(cfg.rounds):
-        cell_params, cell_weights, round_lat = [], [], 0.0
+        cell_params, cell_weights, round_lat, round_e = [], [], 0.0, 0.0
         for c in range(cfg.n_cells):
             plan = plan_round(
                 aous[c], prep.beta[c], prep.h2_all[c][t], prep.wcfg,
                 prep.rng, policy=cfg.policy, round_idx=t,
                 clusters=prep.clusters[c], fixed_ids=prep.fixed_ids[c],
-                ra=_slice_ra(prep.ras[c], t),
-                randomness=RoundRandomness(sel_perm=prep.sel_perms[c][t],
-                                           assign_perm=prep.assign_perms[c][t]))
+                ra=_slice_ra(ras[c], t),
+                randomness=RoundRandomness(
+                    sel_perm=prep.sel_perms[c][t],
+                    assign_perm=prep.assign_perms[c][t]))
             aous[c] = plan.aou_next
-            round_lat = max(round_lat, plan.latency_s)  # cells run in parallel
+            round_lat = max(round_lat, plan.latency_s)  # cells in parallel
+            round_e += float(plan.energy_per_device.sum())
             tx_trace[t, c] = plan.transmitted
+            age_trace[t, c] = aous[c].age
             tx = np.where(plan.transmitted)[0]
             slot_ids = np.zeros(k_slots, dtype=np.int64)
             slot_w = np.zeros(k_slots, dtype=np.float32)
@@ -232,88 +700,60 @@ def run_hierarchical(cfg: HierSimConfig, *, engine: str = "loop",
                 cell_weights.append(float(slot_w.sum()))
         if cell_params:
             stacked = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *cell_params)
+                lambda *leaves: jnp.stack(leaves), *cell_params)
             params = aggregate(params, stacked,
                                jnp.asarray(cell_weights, jnp.float32))
-        losses.append(float(eval_loss(params, x_full, y_full)))
-        latencies.append(round_lat)
-    return {"loss": np.asarray(losses), "latency": np.asarray(latencies),
-            "tx": tx_trace, "wall_s": time.time() - t_start}
+        lat_all[t] = round_lat
+        energy_all[t] = round_e
+        if t in eval_at:
+            eval_rounds.append(t)
+            losses.append(float(eval_loss(params, x_full, y_full)))
+            accs.append(float(eval_acc(params, x_full, y_full)))
+    ev = np.asarray(eval_rounds)
+    return {"loss": np.asarray(losses), "accuracy": np.asarray(accs),
+            "eval_rounds": ev, "cum_time_s": np.cumsum(lat_all)[ev],
+            "latency": lat_all, "energy": energy_all, "tx": tx_trace,
+            "age": age_trace, "wall_s": time.time() - t_start}
 
 
-def _run_hier_scan(cfg: HierSimConfig, prep: _HierPrepared, model, trainer,
-                   params0, key0, x_full, y_full) -> dict:
-    """The fused multi-cell round loop: one `lax.scan`, cells unrolled."""
-    n, k = cfg.devices_per_cell, cfg.subchannels_per_cell
-    n_cells = cfg.n_cells
-    n_clusters = int(math.ceil(n / k))
-    ndev = jnp.arange(n)
-    kslot = jnp.arange(k)
-    f0 = jnp.float32(0.0)
-    pol = cfg.policy
+def run_hierarchical(cfg: HierSimConfig, *, engine: str = "loop",
+                     ra_backend: str | None = None) -> dict:
+    """Two-tier FedAvg: per-cell Stackelberg rounds + inter-cell
+    aggregation (sync barrier or buffered async at either tier).
 
-    data = dict(
-        beta=jnp.asarray(prep.beta, jnp.float32),
-        x=prep.x, y=prep.y, m=prep.m,
-        clusters=jnp.asarray(prep.clusters, jnp.int32),
-        fixed_ids=jnp.asarray(prep.fixed_ids, jnp.int32),
-    )
-    xs = dict(
-        gamma=jnp.asarray(np.stack([ra.time_s for ra in prep.ras], 1),
-                          jnp.float32),                     # (rounds, C, K, N)
-        feas=jnp.asarray(np.stack([ra.feasible for ra in prep.ras], 1)),
-        sel_perm=jnp.asarray(prep.sel_perms.swapaxes(0, 1), jnp.int32),
-        assign_perm=jnp.asarray(prep.assign_perms.swapaxes(0, 1), jnp.int32),
-        t=jnp.arange(cfg.rounds, dtype=jnp.int32),
-    )
+    Args:
+      cfg: multi-cell settings; `cfg.policy` applies to every cell.
+      engine: "loop" (host round loop), "scan" (one fused `lax.scan` over
+        rounds with the cell list unrolled), or "async" (the two-tier
+        buffered event loop, DESIGN.md §15).  Configs whose cell- or
+        global-tier aggregation is async route through the event engine
+        regardless.
+      ra_backend: Γ-solver projection backend override.
 
-    def body(carry, x):
-        params, key, age = carry                            # age (C, N)
-        cell_out, weights, ages = [], [], []
-        latency = f0
-        tx_all = []
-        for c in range(n_cells):
-            lead = leader_round(
-                age[c], data["beta"][c], x["gamma"][c], x["feas"][c],
-                x["sel_perm"][c], x["assign_perm"][c], x["t"],
-                data["clusters"][c], data["fixed_ids"][c],
-                ds=pol.ds, sa=pol.sa, k=k, n=n, n_clusters=n_clusters)
-            tx = lead["transmitted"]
-            ch_g = jnp.where(tx, lead["channel_of"], 0)
-            t_dev = x["gamma"][c][ch_g, ndev]
-            cell_lat = jnp.where(
-                tx.any(), jnp.max(jnp.where(tx, t_dev, -jnp.inf)), f0)
-            latency = jnp.maximum(latency, cell_lat)
-            tx_ids = jnp.nonzero(tx, size=k, fill_value=0)[0]
-            cnt = tx.sum()
-            slot_w = jnp.where(kslot < cnt, data["beta"][c][tx_ids], f0)
-
-            def do_train(ops, c=c, tx_ids=tx_ids, slot_w=slot_w):
-                p, kk = ops
-                kk, k_cell = jax.random.split(kk)
-                keys = jax.random.split(k_cell, k)
-                cp = trainer(p, data["x"][c][tx_ids], data["y"][c][tx_ids],
-                             data["m"][c][tx_ids], keys)
-                return aggregate(p, cp, slot_w), kk
-
-            w_cell, key = jax.lax.cond(
-                cnt > 0, do_train, lambda ops: ops, (params, key))
-            cell_out.append(w_cell)
-            weights.append(slot_w.sum())
-            ages.append(lead["age_next"])
-            tx_all.append(tx)
-
-        stacked = jax.tree_util.tree_map(
-            lambda *leaves: jnp.stack(leaves), *cell_out)
-        params = aggregate(params, stacked, jnp.stack(weights))
-        loss = model.loss(params, x_full, y_full)
-        ys = dict(loss=loss, latency=latency, tx=jnp.stack(tx_all))
-        return (params, key, jnp.stack(ages)), ys
-
-    carry0 = (params0, key0, jnp.ones((n_cells, n), jnp.int32))
-    _, ys = jax.jit(
-        lambda c0, xs_: jax.lax.scan(body, c0, xs_))(carry0, xs)
-    jax.block_until_ready(ys)
-    return {"loss": np.asarray(ys["loss"], np.float64),
-            "latency": np.asarray(ys["latency"], np.float64),
-            "tx": np.asarray(ys["tx"])}
+    Returns a dict with FULL per-round traces regardless of
+    `cfg.eval_every` — "latency"/"energy" (rounds,), "tx"/"age"
+    (rounds, n_cells, N) — plus eval-sampled curves "loss"/"accuracy"/
+    "cum_time_s" at "eval_rounds", and "wall_s".  engine="async" adds
+    "committed" (rounds, n_cells, N), "cell_committed" and
+    "latency_cells" (rounds, n_cells).
+    """
+    if engine not in ("loop", "scan", "async"):
+        raise ValueError(f"unknown engine: {engine}")
+    async_mode = (engine == "async"
+                  or get_aggregation(cfg.aggregation) is not None
+                  or get_aggregation(cfg.global_aggregation) is not None)
+    if engine == "loop" and not async_mode:
+        return _run_hier_loop(cfg, ra_backend)
+    hist = run_hier_many([cfg], engine="async" if async_mode else "scan",
+                         ra_backend=ra_backend)[0]
+    shape = (cfg.rounds, cfg.n_cells, cfg.devices_per_cell)
+    out = {"loss": hist.global_loss, "accuracy": hist.accuracy,
+           "eval_rounds": hist.rounds, "cum_time_s": hist.cum_time_s,
+           "latency": hist.latency_all, "energy": hist.energy_all,
+           "tx": hist.tx_trace.reshape(shape),
+           "age": hist.age_trace.reshape(shape), "wall_s": hist.wall_s}
+    if hist.commit_trace is not None:
+        out["committed"] = hist.commit_trace.reshape(shape)
+        out["cell_committed"] = hist.async_trace["cell_committed"]
+        out["latency_cells"] = hist.async_trace["latency_cells"]
+    return out

@@ -30,6 +30,7 @@ from .processes import (
     MobilityProcess,
     compose_gains,
     sample_churn,
+    sample_coupled_fading,
     sample_distances,
     sample_energy,
     sample_fading,
@@ -49,8 +50,8 @@ from .stream import ScenarioStream
 __all__ = [
     # process configs + generators
     "FadingProcess", "MobilityProcess", "ChurnProcess", "EnergyProcess",
-    "sample_fading", "sample_distances", "sample_churn", "sample_energy",
-    "compose_gains",
+    "sample_fading", "sample_coupled_fading", "sample_distances",
+    "sample_churn", "sample_energy", "compose_gains",
     # scenario bundle + registry
     "Scenario", "ScenarioTraces", "PRESETS", "get_scenario",
     "register_scenario", "scenario_name", "generate_traces",

@@ -11,8 +11,8 @@ add it here with its reason.
 * ``@given`` property tests (test_wireless, test_matching,
   test_stackelberg, test_monotonic, test_aou_selection, test_fl_substrate,
   test_property_invariants, test_scenario_properties,
-  test_async_properties): skip PER TEST when `hypothesis` is not
-  installed, via the ``tests/_hyp.py`` shim.  These modules previously
+  test_async_properties, test_hier_async_properties): skip PER TEST
+  when `hypothesis` is not installed, via the ``tests/_hyp.py`` shim.  These modules previously
   skipped WHOLESALE through a module-level ``pytest.importorskip``,
   which also silently dropped ~30 deterministic tests sharing the files;
   the shim keeps those running everywhere.  `hypothesis` is an optional
@@ -24,9 +24,10 @@ add it here with its reason.
   point makes the energy budget bind under the current WirelessConfig
   defaults — if a config change relaxes the budget there, the test is
   vacuous, not broken.
-* test_sweep.py's 2-device shard check and the launch dry-runs spawn
-  subprocesses with ``XLA_FLAGS=--xla_force_host_platform_device_count``
-  and skip only if the subprocess environment cannot host them.
+* test_sweep.py's and test_hier_async_equivalence.py's 2-device shard
+  checks and the launch dry-runs spawn subprocesses with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count`` and skip only if
+  the subprocess environment cannot host them.
 
 hypothesis settings: the "ci" profile (max_examples=25, no deadline)
 keeps property runtime bounded on 2-core CI runners.
